@@ -1,0 +1,22 @@
+"""Paper Table 4 analogue — ChaseBench-style recursive existential scenario
+(iBench STB/ONT shape): non-linear rules, existentials, heavy joins."""
+from __future__ import annotations
+
+from benchmarks.common import emit, peak_rss_mb, timed, warmup
+from repro.data.kb_sources import CHASEBENCH, chasebench_facts
+from repro.engine.materialize import EngineKB, materialize
+
+
+def run():
+    B = chasebench_facts(n=400)
+    warmup(CHASEBENCH, chasebench_facts(n=60), modes=("seminaive", "tg"), max_rounds=40)
+    for mode in ("seminaive", "tg"):
+        kb = EngineKB(CHASEBENCH, B)
+        st, t = timed(materialize, kb, mode=mode, max_rounds=40)
+        emit(f"chasebench.STB-like.{mode}", t, st.derived,
+             triggers=st.triggers, rounds=st.rounds,
+             mem_mb=f"{peak_rss_mb():.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Table 7 analogue — scalability sweep: LUBM-L at growing scale;
+reports runtime, derived facts and throughput (facts/s).  The paper scales to
+17B facts on 256 GB; this container is 1-core CPU so the sweep is truncated,
+with per-scale throughput showing the near-linear trend."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit, peak_rss_mb, timed, warmup
+from repro.data.kb_sources import LUBM_L, lubm_facts
+from repro.engine.materialize import EngineKB, materialize
+
+
+def run():
+    scales = (1, 2, 4, 8)
+    if os.environ.get("BENCH_LARGE"):
+        scales = (1, 2, 4, 8, 16, 32)
+    warmup(LUBM_L, lubm_facts(n_univ=1), modes=("tg",))
+    for n_univ in scales:
+        B = lubm_facts(n_univ=n_univ)
+        kb = EngineKB(LUBM_L, B)
+        st, t = timed(materialize, kb, mode="tg")
+        total = kb.num_facts()
+        emit(f"scalability.LUBM-L.univ{n_univ}", t, st.derived,
+             base=len(B), total=total,
+             facts_per_s=f"{st.derived / max(t, 1e-9):.0f}",
+             mem_mb=f"{peak_rss_mb():.0f}")
+
+
+if __name__ == "__main__":
+    run()

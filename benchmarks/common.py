@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing, memory, CSV emit."""
+from __future__ import annotations
+
+import os
+import resource
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0)
+
+
+def emit(name: str, seconds: float, derived: int, **extra):
+    """CSV row: name,us_per_call,derived[,k=v...]"""
+    cols = [name, f"{seconds * 1e6:.0f}", str(derived)]
+    cols += [f"{k}={v}" for k, v in extra.items()]
+    print(",".join(cols), flush=True)
+
+
+def warmup(program, base, modes=("seminaive", "tg_noopt", "tg"), **kw):
+    """Run a small instance through every mode so jit compilation (per
+    capacity bucket) is paid before timing."""
+    from repro.engine.materialize import EngineKB, materialize
+    for mode in modes:
+        kb = EngineKB(program, base)
+        materialize(kb, mode=mode, **kw)

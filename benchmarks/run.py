@@ -1,0 +1,32 @@
+"""Benchmark driver — one module per paper table.
+
+Prints ``name,us_per_call,derived[,k=v...]`` CSV rows.  Each module warms the
+jit caches with a small instance before timing (capacity-bucketed kernels are
+compile-once-per-bucket).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (bench_chasebench, bench_datalog, bench_linear,
+                        bench_rdfs, bench_scalability, bench_triggers)
+
+TABLES = {
+    "linear": bench_linear.run,          # paper Table 2
+    "datalog": bench_datalog.run,        # paper Table 3
+    "chasebench": bench_chasebench.run,  # paper Table 4
+    "triggers": bench_triggers.run,      # paper Table 5 / 8a
+    "rdfs": bench_rdfs.run,              # paper Table 6
+    "scalability": bench_scalability.run,  # paper Table 7
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived,extra...")
+    for name in which:
+        TABLES[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Distributed TG materialization demo (beyond-paper): hash-partitioned
+facts, all_to_all repartition joins, psum convergence — on 8 simulated
+devices.
+
+    python examples/distributed_materialize.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+from jax.sharding import AxisType
+
+from repro.engine.distributed import DistConfig, run_distributed_tc
+
+
+def main():
+    rng = np.random.default_rng(0)
+    edges = np.unique(rng.integers(0, 300, (2000, 2)).astype(np.int32),
+                      axis=0)
+    mesh = jax.make_mesh((8, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    cfg = DistConfig(shard_cap=1 << 15, delta_cap=1 << 13, bucket_cap=1 << 11)
+    print(f"[dist] {len(edges)} edges over {mesh.shape['data']} shards")
+    t_store, count, triggers, rounds = run_distributed_tc(edges, mesh, cfg)
+    print(f"[dist] closure={count} facts rounds={rounds} triggers={triggers}")
+
+    # single-shard oracle
+    from collections import defaultdict
+    adj = defaultdict(set)
+    for a, b in edges:
+        adj[a].add(b)
+    closure = set(map(tuple, edges))
+    frontier = set(closure)
+    while frontier:
+        new = set()
+        for (x, y) in frontier:
+            for z in adj[y]:
+                if (x, z) not in closure:
+                    new.add((x, z))
+        closure |= new
+        frontier = new
+    assert count == len(closure), (count, len(closure))
+    print(f"[dist] verified against host oracle ({len(closure)} facts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh) cell, all in seconds:
+
+    compute    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes            / (chips * HBM_BW)
+    collective = collective_bytes     / (chips * LINK_BW)
+
+``cost_analysis()`` reports *per-device-program* flops/bytes; we multiply by
+chip count to get fleet totals, then divide by fleet capability — i.e. the
+terms are per-chip step latencies assuming perfect overlap within each class.
+
+collective_bytes is NOT in cost_analysis: we parse the compiled HLO text and
+sum operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.  Bytes are per-device payloads (shapes in the post-
+SPMD module are per-device).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e-like hardware constants (per brief)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_\[\],{} ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _parse_result_bytes(line: str) -> int:
+    """Sum byte sizes of the result shapes on an HLO op line."""
+    lhs = line.split("=", 1)[0] if "=" in line else ""
+    rhs = line.split("=", 1)[1] if "=" in line else line
+    # result type annotation sits right after '=' and before the op name
+    m = re.match(r"\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?)", rhs)
+    if not m:
+        return 0
+    seg = m.group(1)
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-kind result bytes of collective ops in (post-SPMD) HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # avoid double count of async pairs (count the -start)
+        kind = m.group(1).lower()
+        b = _parse_result_bytes(line)
+        out[kind] += b
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in
+                       ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+@dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                 # fleet total
+    hlo_bytes: float                 # fleet total
+    coll_bytes: float                # per-chip payload total
+    coll_detail: dict
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float
+    mem_per_device: float
+
+    def to_json(self):
+        return self.__dict__
+
+
+def analyze(arch, shape, mesh_name, chips, cost, hlo_text, model_flops,
+            mem_stats=None) -> RooflineResult:
+    """Roofline terms from the trip-count-aware HLO walk (hlo_analysis).
+
+    ``cost_analysis()`` numbers are kept in ``coll_detail['xla_cost']`` for
+    reference, but XLA:CPU counts while bodies once, so the corrected walk is
+    authoritative (see hlo_analysis docstring).
+    """
+    from repro.analysis import hlo_analysis as HA
+    t = HA.analyze_text(hlo_text)
+    per_dev_flops = float(t["flops"])
+    per_dev_bytes = float(t["bytes"])
+    cb = dict(t["coll"])
+    cb["total"] = float(t["coll_bytes"])
+    cb["count"] = int(t["coll_count"])
+    cb["xla_cost"] = {"flops": float(cost.get("flops", 0.0)),
+                      "bytes accessed": float(cost.get("bytes accessed", 0.0))}
+    hlo_flops = per_dev_flops * chips
+    hlo_bytes = per_dev_bytes * chips
+    compute_s = per_dev_flops / PEAK_FLOPS
+    memory_s = per_dev_bytes / HBM_BW
+    collective_s = cb["total"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / hlo_flops if hlo_flops else 0.0
+    return RooflineResult(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        coll_bytes=cb["total"], coll_detail=cb,
+        model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, useful_ratio=useful,
+        mem_per_device=float(mem_stats) if mem_stats is not None else 0.0)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D train (N=active for MoE), 2*N*D forward-only."""
+    counts = cfg.param_counts()
+    n = counts["active"]
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,96 @@
+"""Tokenized data pipeline: deterministic, checkpointable streams.
+
+Two sources:
+* ``SyntheticTokens`` — seeded random token stream (throughput tests).
+* ``KBLinearizer``   — the paper-integration path: a *materialized KB*
+  (engine output) linearized into token sequences
+  ``[PRED] [ARG0] ... [SEP]`` for LM pretraining (KG-to-text without a
+  natural-language surface form; vocabulary = dictionary ids).
+
+Both expose ``state()``/``restore(state)`` so input position lives in the
+checkpoint.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticTokens:
+    def __init__(self, vocab_size: int, batch: int, seq: int, seed: int = 0):
+        self.vocab = vocab_size
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.step = 0
+
+    def state(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, st):
+        self.step = int(st["step"])
+        self.seed = int(st["seed"])
+
+    def next(self):
+        rng = np.random.default_rng((self.seed, self.step))
+        self.step += 1
+        toks = rng.integers(0, self.vocab, (self.batch, self.seq + 1),
+                            dtype=np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class KBLinearizer:
+    """Linearize dictionary-encoded facts into LM token sequences."""
+
+    def __init__(self, kb, batch: int, seq: int, seed: int = 0):
+        # token layout: [0]=PAD [1]=SEP, predicates and constants follow
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.step = 0
+        preds = sorted(kb.rels)
+        pred_id = {p: i for i, p in enumerate(preds)}
+        n_pred = len(preds)
+        n_const = len(kb.dict)
+        n_null = kb.dict.num_nulls
+        self.vocab_size = 2 + n_pred + n_const + n_null
+        rows = []
+        for p, rel in kb.rels.items():
+            ar = kb.arities[p]
+            for r in rel.np_rows():
+                seqt = [2 + pred_id[p]]
+                for x in r[:ar]:
+                    x = int(x)
+                    if x >= 0:
+                        seqt.append(2 + n_pred + x)
+                    else:
+                        seqt.append(2 + n_pred + n_const + (-x) - 1)
+                seqt.append(1)
+                rows.append(seqt)
+        rng = np.random.default_rng(seed)
+        rng.shuffle(rows)
+        self.stream = np.concatenate([np.asarray(r, np.int32) for r in rows]) \
+            if rows else np.zeros(8, np.int32)
+
+    def state(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, st):
+        self.step = int(st["step"])
+
+    def next(self):
+        n = self.batch * (self.seq + 1)
+        start = (self.step * n) % max(len(self.stream) - n - 1, 1)
+        self.step += 1
+        if len(self.stream) < n + 1:
+            reps = (n + 1) // len(self.stream) + 1
+            buf = np.tile(self.stream, reps)[:n + 1]
+        else:
+            buf = self.stream[start:start + n + 1]
+            if len(buf) < n + 1:
+                buf = np.concatenate([buf, self.stream[:n + 1 - len(buf)]])
+        toks = buf[:n].reshape(self.batch, self.seq + 1)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}

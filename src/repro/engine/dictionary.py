@@ -1,0 +1,50 @@
+"""Dictionary encoding of constants/nulls to int32 ids (GLog stores terms via
+Trident's dictionary; we do the same at ingest).
+
+Ids:
+* constants: 0 .. n-1 (interned strings)
+* skolem nulls: negative ids, allocated per (rule, exvar, frontier tuple) —
+  matching the skolem chase the engine implements for existential rules.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List
+
+
+class Dictionary:
+    def __init__(self):
+        self._to_id: Dict[Hashable, int] = {}
+        self._from_id: List[Hashable] = []
+        self._skolem: Dict[tuple, int] = {}
+        self._next_null = -1
+
+    def encode(self, term) -> int:
+        i = self._to_id.get(term)
+        if i is None:
+            i = len(self._from_id)
+            self._to_id[term] = i
+            self._from_id.append(term)
+        return i
+
+    def encode_many(self, terms):
+        return [self.encode(t) for t in terms]
+
+    def decode(self, i: int):
+        if i < 0:
+            return f"_sk{-i}"
+        return self._from_id[i]
+
+    def skolem(self, key: tuple) -> int:
+        i = self._skolem.get(key)
+        if i is None:
+            i = self._next_null
+            self._next_null -= 1
+            self._skolem[key] = i
+        return i
+
+    def __len__(self):
+        return len(self._from_id)
+
+    @property
+    def num_nulls(self):
+        return -self._next_null - 1

@@ -1,0 +1,290 @@
+"""Vectorized relational operators on padded int32 relations (pure jnp).
+
+All functions are shape-stable and jit-cached per capacity bucket.  Data-
+dependent sizes follow the two-phase pattern: a jitted *count* pass, a host
+pow-2 bucket choice, then a jitted *materialize* pass.
+
+The sort/dedup/probe inner loops have Pallas TPU kernels in
+``repro.kernels`` (used when ``repro.kernels.ops.USE_PALLAS`` is on); these
+jnp versions are the reference implementations and the CPU path.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.relation import PAD, Relation, next_pow2
+
+
+# ---------------------------------------------------------------------------
+# sorting / dedup
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _lexsort_fn(cap, ar):
+    @jax.jit
+    def f(data):
+        keys = tuple(data[:, c] for c in reversed(range(ar)))
+        order = jnp.lexsort(keys)
+        return data[order]
+    return f
+
+
+def lexsort_rows(rel: Relation) -> Relation:
+    return Relation(_lexsort_fn(rel.capacity, rel.arity)(rel.data), rel.count)
+
+
+@lru_cache(maxsize=None)
+def _dedup_count_fn(cap, ar):
+    @jax.jit
+    def f(sorted_data):
+        prev = jnp.roll(sorted_data, 1, axis=0)
+        neq = jnp.any(sorted_data != prev, axis=1)
+        neq = neq.at[0].set(True)
+        valid = sorted_data[:, 0] != PAD
+        return jnp.sum(jnp.logical_and(neq, valid)), jnp.logical_and(neq, valid)
+    return f
+
+
+@lru_cache(maxsize=None)
+def _compact_fn(cap, ar, out_cap):
+    @jax.jit
+    def f(data, mask):
+        pos = jnp.cumsum(mask) - 1
+        idx = jnp.where(mask, pos, out_cap)
+        out = jnp.full((out_cap + 1, ar), PAD, jnp.int32)
+        out = out.at[idx].set(data, mode="drop")
+        return out[:out_cap]
+    return f
+
+
+def dedup(rel: Relation) -> Relation:
+    """Sort + adjacent-unique + compact."""
+    if rel.count == 0:
+        return Relation.empty(rel.arity)
+    s = lexsort_rows(rel)
+    n, mask = _dedup_count_fn(rel.capacity, rel.arity)(s.data)
+    n = int(n)
+    cap = next_pow2(n)
+    out = _compact_fn(rel.capacity, rel.arity, cap)(s.data, mask)
+    return Relation(out, n)
+
+
+# ---------------------------------------------------------------------------
+# filters / projection
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _filter_count_fn(cap, ar, eq_pairs, const_pairs):
+    @jax.jit
+    def f(data):
+        valid = data[:, 0] != PAD
+        for a, b in eq_pairs:
+            valid &= data[:, a] == data[:, b]
+        for c, v in const_pairs:
+            valid &= data[:, c] == v
+        return jnp.sum(valid), valid
+    return f
+
+
+def filter_rows(rel: Relation, eq_pairs=(), const_pairs=()) -> Relation:
+    """Select rows with col equality (repeated vars) / constant constraints."""
+    if rel.count == 0 or (not eq_pairs and not const_pairs):
+        return rel
+    n, mask = _filter_count_fn(rel.capacity, rel.arity, tuple(eq_pairs),
+                               tuple(const_pairs))(rel.data)
+    n = int(n)
+    cap = next_pow2(n)
+    out = _compact_fn(rel.capacity, rel.arity, cap)(rel.data, mask)
+    return Relation(out, n)
+
+
+@lru_cache(maxsize=None)
+def _project_fn(cap, ar, cols):
+    @jax.jit
+    def f(data):
+        valid = data[:, 0] != PAD
+        out = data[:, jnp.array(cols, jnp.int32)]
+        return jnp.where(valid[:, None], out, PAD)
+    return f
+
+
+def project(rel: Relation, cols) -> Relation:
+    if not cols:
+        cols = (0,)
+    return Relation(_project_fn(rel.capacity, rel.arity, tuple(cols))(rel.data),
+                    rel.count)
+
+
+# ---------------------------------------------------------------------------
+# sort-merge join (single int32 key column; multi-column keys are packed by
+# the planner with post-join verification)
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _sortby_fn(cap, ar, key_col):
+    @jax.jit
+    def f(data):
+        order = jnp.argsort(data[:, key_col])
+        return data[order]
+    return f
+
+
+def sort_by(rel: Relation, key_col: int) -> Relation:
+    return Relation(_sortby_fn(rel.capacity, rel.arity, key_col)(rel.data),
+                    rel.count)
+
+
+@lru_cache(maxsize=None)
+def _join_count_fn(lcap, lar, rcap, rar, lkey, rkey):
+    @jax.jit
+    def f(l, r):
+        lk = l[:, lkey]
+        rk = r[:, rkey]
+        lo = jnp.searchsorted(rk, lk, side="left")
+        hi = jnp.searchsorted(rk, lk, side="right")
+        valid = lk != PAD
+        per = jnp.where(valid, hi - lo, 0)
+        cum = jnp.cumsum(per) - per           # exclusive prefix
+        return jnp.sum(per), per, cum, lo
+    return f
+
+
+@lru_cache(maxsize=None)
+def _join_mat_fn(lcap, lar, rcap, rar, out_cap):
+    @jax.jit
+    def f(l, r, per, cum, lo, total):
+        t = jnp.arange(out_cap)
+        # left row for output t: last i with cum[i] <= t
+        i = jnp.searchsorted(cum + per, t, side="right")
+        i = jnp.clip(i, 0, lcap - 1)
+        j = lo[i] + (t - cum[i])
+        j = jnp.clip(j, 0, rcap - 1)
+        valid = t < total
+        lrow = l[i]
+        rrow = r[j]
+        out = jnp.concatenate([lrow, rrow], axis=1)
+        return jnp.where(valid[:, None], out, PAD)
+    return f
+
+
+def sm_join(l: Relation, r: Relation, lkey: int, rkey: int):
+    """Sort-merge join; returns (Relation out, matches) where out columns are
+    [l cols..., r cols...] and ``matches`` is the trigger count."""
+    if l.count == 0 or r.count == 0:
+        return Relation.empty(l.arity + r.arity), 0
+    ls = sort_by(l, lkey)
+    rs = sort_by(r, rkey)
+    total, per, cum, lo = _join_count_fn(
+        l.capacity, l.arity, r.capacity, r.arity, lkey, rkey)(ls.data, rs.data)
+    total = int(total)
+    if total == 0:
+        return Relation.empty(l.arity + r.arity), 0
+    out_cap = next_pow2(total)
+    out = _join_mat_fn(l.capacity, l.arity, r.capacity, r.arity, out_cap)(
+        ls.data, rs.data, per, cum, lo, total)
+    return Relation(out, total), total
+
+
+def cross(l: Relation, r: Relation):
+    """Cartesian product (rare in practice; needed for disconnected bodies)."""
+    if l.count == 0 or r.count == 0:
+        return Relation.empty(l.arity + r.arity), 0
+    total = l.count * r.count
+    out_cap = next_pow2(total)
+    li = jnp.repeat(jnp.arange(l.count), r.count, total_repeat_length=total)
+    ri = jnp.tile(jnp.arange(r.count), l.count)[:total]
+    out = jnp.full((out_cap, l.arity + r.arity), PAD, jnp.int32)
+    rows = jnp.concatenate([l.data[li], r.data[ri]], axis=1)
+    out = jax.lax.dynamic_update_slice(out, rows, (0, 0))
+    return Relation(out, total), total
+
+
+# ---------------------------------------------------------------------------
+# antijoin (Def. 23 / redundancy filtering): drop rows whose key-tuple occurs
+# in a sorted haystack relation
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _anti_count_fn(cap, ar, hcap, har, cols):
+    @jax.jit
+    def f(data, hay_sorted):
+        # compare on all haystack columns: hay is the full (har)-tuple set;
+        # probe tuple built from data[:, cols]
+        probe = data[:, jnp.array(cols, jnp.int32)]
+        # lexicographic binary search via packed comparison per column chain:
+        # search on first col, then verify with scan over candidates is not
+        # shape-stable; instead: since haystack rows are lexsorted, use
+        # searchsorted over a fused comparison by iterating columns.
+        n = hay_sorted.shape[0]
+        lo = jnp.zeros(probe.shape[0], jnp.int32)
+        hi = jnp.full(probe.shape[0], n, jnp.int32)
+        for c in range(har):
+            col = hay_sorted[:, c]
+            key = probe[:, c]
+            # narrow [lo, hi) to rows where col == key using vectorized
+            # searchsorted on the global sorted column is invalid; use
+            # per-row binary search instead
+            lo, hi = _range_narrow(col, key, lo, hi)
+        found = hi > lo
+        valid = data[:, 0] != PAD
+        keep = jnp.logical_and(valid, jnp.logical_not(found))
+        return jnp.sum(keep), keep
+    return f
+
+
+def _range_narrow(col, key, lo, hi):
+    """Per-row binary search narrowing [lo,hi) to col==key (col sorted within
+    each [lo,hi) range by lexsort invariant)."""
+    n = col.shape[0]
+    steps = max(1, int(np.ceil(np.log2(n + 1))))
+
+    def bs(side):
+        l, h = lo, hi
+        for _ in range(steps):
+            mid = (l + h) // 2
+            v = col[jnp.clip(mid, 0, n - 1)]
+            go_right = jnp.where(side == 0, v < key, v <= key)
+            l = jnp.where(jnp.logical_and(mid < h, go_right), mid + 1, l)
+            h = jnp.where(jnp.logical_and(mid < h, jnp.logical_not(go_right)),
+                          mid, h)
+        return l
+
+    new_lo = bs(jnp.array(0))
+    new_hi = bs(jnp.array(1))
+    return new_lo, new_hi
+
+
+def antijoin(rel: Relation, hay: Relation, cols=None) -> Relation:
+    """Rows of rel whose ``cols``-tuple is NOT in hay (hay lexsorted)."""
+    if rel.count == 0:
+        return rel
+    if hay.count == 0:
+        return rel
+    cols = tuple(cols) if cols is not None else tuple(range(rel.arity))
+    assert len(cols) == hay.arity
+    hs = lexsort_rows(hay)
+    n, keep = _anti_count_fn(rel.capacity, rel.arity, hay.capacity, hay.arity,
+                             cols)(rel.data, hs.data)
+    n = int(n)
+    if n == rel.count:
+        return rel
+    cap = next_pow2(n)
+    out = _compact_fn(rel.capacity, rel.arity, cap)(rel.data, keep)
+    return Relation(out, n)
+
+
+# ---------------------------------------------------------------------------
+# union / append
+# ---------------------------------------------------------------------------
+def union(a: Relation, b: Relation, dedupe: bool = True) -> Relation:
+    if a.count == 0:
+        return b
+    if b.count == 0:
+        return a
+    n = a.count + b.count
+    cap = next_pow2(n)
+    data = jnp.full((cap, a.arity), PAD, jnp.int32)
+    data = jax.lax.dynamic_update_slice(data, a.data[:a.count], (0, 0))
+    data = jax.lax.dynamic_update_slice(data, b.data[:b.count], (a.count, 0))
+    out = Relation(data, n)
+    return dedup(out) if dedupe else out

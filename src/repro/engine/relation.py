@@ -1,0 +1,56 @@
+"""Padded fixed-capacity relations (int32 column tensors) with pow-2 capacity
+bucketing: the XLA-compatible representation of GLog's columnar tables.
+
+A ``Relation`` holds ``data`` (capacity, arity) int32 and a fill ``count``.
+Rows past ``count`` are padding (PAD).  All engine ops are shape-stable; data-
+dependent output sizes use a jitted count pass + host-side pow-2 bucket choice
++ a jitted materialize pass (bounded recompilation).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD = jnp.iinfo(jnp.int32).max
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n - 1).bit_length())
+
+
+@dataclass
+class Relation:
+    data: jax.Array          # (capacity, arity) int32, rows >= count are PAD
+    count: int               # python int (host-side fill level)
+
+    @property
+    def capacity(self):
+        return self.data.shape[0]
+
+    @property
+    def arity(self):
+        return self.data.shape[1]
+
+    def np_rows(self):
+        return np.asarray(self.data[:self.count])
+
+    @staticmethod
+    def from_numpy(rows: np.ndarray, capacity: int = 0) -> "Relation":
+        n = rows.shape[0]
+        cap = max(next_pow2(n), 1, capacity)
+        arity = rows.shape[1] if rows.ndim == 2 else 1
+        data = np.full((cap, arity), np.iinfo(np.int32).max, np.int32)
+        if n:
+            data[:n] = rows
+        return Relation(jnp.asarray(data), n)
+
+    @staticmethod
+    def empty(arity: int, capacity: int = 1) -> "Relation":
+        return Relation(jnp.full((max(capacity, 1), arity), PAD, jnp.int32), 0)
+
+    def rows_set(self):
+        return {tuple(int(x) for x in r) for r in self.np_rows()}

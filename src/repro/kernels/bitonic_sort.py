@@ -1,0 +1,112 @@
+"""Bitonic sort Pallas kernel (key int32 + payload int32 permutation).
+
+TPU adaptation of GLog's sort-based join/dedup machinery: the inner sorting
+network runs entirely in VMEM on power-of-two tiles; compare-exchange steps
+are vectorized across lanes (VPU-friendly reshapes — each (k, j) stage is a
+reshape + elementwise min/max, no scatter/gather).
+
+The kernel sorts one (TILE,)-sized block per grid cell; larger arrays are
+sorted as tiles and merged by ``ops.sort_pairs`` (log-depth pairwise bitonic
+merges, each merge itself a kernel call).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cmp_exchange(keys, vals, j):
+    """One compare-exchange stage at distance j over axis 0 (length n)."""
+    n = keys.shape[0]
+    kk = keys.reshape(n // (2 * j), 2, j)
+    vv = vals.reshape(n // (2 * j), 2, j)
+    lo_k, hi_k = kk[:, 0], kk[:, 1]
+    lo_v, hi_v = vv[:, 0], vv[:, 1]
+    swap = lo_k > hi_k
+    new_lo_k = jnp.where(swap, hi_k, lo_k)
+    new_hi_k = jnp.where(swap, lo_k, hi_k)
+    new_lo_v = jnp.where(swap, hi_v, lo_v)
+    new_hi_v = jnp.where(swap, lo_v, hi_v)
+    keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(n)
+    vals = jnp.stack([new_lo_v, new_hi_v], axis=1).reshape(n)
+    return keys, vals
+
+
+def _reverse_blocks(keys, vals, k):
+    n = keys.shape[0]
+    kk = keys.reshape(n // (2 * k), 2, k)
+    vv = vals.reshape(n // (2 * k), 2, k)
+    keys = jnp.concatenate([kk[:, :1], kk[:, 1:, ::-1]], axis=1).reshape(n)
+    vals = jnp.concatenate([vv[:, :1], vv[:, 1:, ::-1]], axis=1).reshape(n)
+    return keys, vals
+
+
+def _bitonic_kernel(k_ref, v_ref, ko_ref, vo_ref, *, tile: int):
+    keys = k_ref[...]
+    vals = v_ref[...]
+    n = tile
+    size = 2
+    while size <= n:
+        # make bitonic: reverse the second half of each size-block
+        keys, vals = _reverse_blocks(keys, vals, size // 2)
+        j = size // 2
+        while j >= 1:
+            keys, vals = _cmp_exchange(keys, vals, j)
+            j //= 2
+        size *= 2
+    ko_ref[...] = keys
+    vo_ref[...] = vals
+
+
+def _merge_kernel(k_ref, v_ref, ko_ref, vo_ref, *, tile: int):
+    """Bitonic merge of two sorted halves (second half reversed on the fly)."""
+    keys = k_ref[...]
+    vals = v_ref[...]
+    keys, vals = _reverse_blocks(keys, vals, tile // 2)
+    j = tile // 2
+    while j >= 1:
+        keys, vals = _cmp_exchange(keys, vals, j)
+        j //= 2
+    ko_ref[...] = keys
+    vo_ref[...] = vals
+
+
+def bitonic_sort_tiles(keys, vals, tile: int, *, interpret: bool = True):
+    """Sort each (tile,) block of keys/vals independently.  keys: (n,) int32
+    with n % tile == 0."""
+    n = keys.shape[0]
+    assert n % tile == 0 and (tile & (tile - 1)) == 0
+    grid = (n // tile,)
+    return pl.pallas_call(
+        functools.partial(_bitonic_kernel, tile=tile),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((tile,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), keys.dtype),
+                   jax.ShapeDtypeStruct((n,), vals.dtype)],
+        interpret=interpret,
+    )(keys, vals)
+
+
+def bitonic_merge_pairs(keys, vals, tile: int, *, interpret: bool = True):
+    """Merge adjacent sorted blocks of length tile//2 into sorted blocks of
+    length tile (keys: (n,), n % tile == 0)."""
+    n = keys.shape[0]
+    assert n % tile == 0 and (tile & (tile - 1)) == 0
+    grid = (n // tile,)
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, tile=tile),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                   pl.BlockSpec((tile,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), keys.dtype),
+                   jax.ShapeDtypeStruct((n,), vals.dtype)],
+        interpret=interpret,
+    )(keys, vals)

@@ -1,0 +1,53 @@
+"""Sorted-membership probe Pallas kernel (the Def. 23 antijoin /
+redundancy-filter core).
+
+For each query key, a vectorized binary search over a sorted haystack that
+lives fully in VMEM (up to ~1M int32 = 4 MB).  The search loop is a static
+log2(H) unroll of min/max lane ops — no data-dependent control flow, so the
+whole probe block runs on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(q_ref, hay_ref, out_ref, *, steps: int, hay_n: int):
+    q = q_ref[...]                           # (tile,)
+    hay = hay_ref[...]                       # (hay_n,)
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, hay_n, jnp.int32)
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        v = hay[jnp.clip(mid, 0, hay_n - 1)]
+        go = jnp.logical_and(mid < hi, v < q)
+        lo = jnp.where(go, mid + 1, lo)
+        hi = jnp.where(jnp.logical_and(mid < hi, jnp.logical_not(go)),
+                       mid, hi)
+    found = hay[jnp.clip(lo, 0, hay_n - 1)] == q
+    found = jnp.logical_and(found, lo < hay_n)
+    out_ref[...] = found.astype(jnp.int32)
+
+
+def probe_sorted(queries, hay_sorted, tile: int = 1024, *,
+                 interpret: bool = True):
+    """queries: (N,) int32; hay_sorted: (H,) sorted int32.
+    Returns (N,) int32 membership flags."""
+    N = queries.shape[0]
+    H = hay_sorted.shape[0]
+    assert N % tile == 0
+    steps = max(1, math.ceil(math.log2(H + 1)))
+    grid = (N // tile,)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, steps=steps, hay_n=H),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((H,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        interpret=interpret,
+    )(queries, hay_sorted)

@@ -1,0 +1,50 @@
+"""Jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel bodies run through the Pallas interpreter for correctness validation.
+On TPU set ``INTERPRET = False`` (the launch scripts do this when
+``jax.default_backend() == 'tpu'``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitonic_sort as BS
+from repro.kernels import hash_probe as HP
+from repro.kernels import unique_mask as UM
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def sort_with_payload(keys, vals, tile: int = 1024):
+    """Full sort of (n,) int32 keys + payload: tile-sort kernel + log-depth
+    pairwise bitonic merge kernels."""
+    n = keys.shape[0]
+    assert n % tile == 0 and (n & (n - 1)) == 0
+    keys, vals = BS.bitonic_sort_tiles(keys, vals, min(tile, n),
+                                       interpret=INTERPRET)
+    width = tile * 2
+    while width <= n:
+        keys, vals = BS.bitonic_merge_pairs(keys, vals, width,
+                                            interpret=INTERPRET)
+        width *= 2
+    return keys, vals
+
+
+def unique_mask(data, tile: int = 1024):
+    n = data.shape[0]
+    t = min(tile, n)
+    while n % t:
+        t //= 2
+    return UM.unique_mask(data, tile=t, interpret=INTERPRET)
+
+
+def probe_sorted(queries, hay_sorted, tile: int = 1024):
+    n = queries.shape[0]
+    t = min(tile, n)
+    while n % t:
+        t //= 2
+    return HP.probe_sorted(queries, hay_sorted, tile=t, interpret=INTERPRET)

@@ -1,0 +1,50 @@
+"""Adjacent-unique mask Pallas kernel over lexsorted rows.
+
+Given sorted row-major (N, C) int32 data, emits mask[i] = 1 iff row i differs
+from row i-1 (and is not padding).  This is the dedup core fused after the
+sort (GLog's duplicate elimination).  Block boundaries read one overlapping
+row via a shifted input block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.engine.relation import PAD
+
+
+def _unique_kernel(cur_ref, prev_ref, out_ref):
+    i = pl.program_id(0)
+    cur = cur_ref[...]                       # (tile, C)
+    prev = prev_ref[...]                     # (tile, C): rows shifted by -1
+    neq = jnp.any(cur != prev, axis=1)
+    first_global = jnp.logical_and(i == 0,
+                                   jax.lax.broadcasted_iota(
+                                       jnp.int32, neq.shape, 0) == 0)
+    valid = cur[:, 0] != PAD
+    out_ref[...] = jnp.where(
+        jnp.logical_and(valid, jnp.logical_or(neq, first_global)), 1, 0
+    ).astype(jnp.int32)
+
+
+def unique_mask(data, tile: int = 1024, *, interpret: bool = True):
+    """data: (N, C) int32 lexsorted (PAD rows last).  Returns (N,) int32."""
+    N, C = data.shape
+    assert N % tile == 0, (N, tile)
+    # shifted copy supplies row i-1; row -1 is a PAD row (compares unequal
+    # to any valid row, equal only to other PAD rows which are masked out)
+    shifted = jnp.concatenate(
+        [jnp.full((1, C), PAD, data.dtype), data[:-1]], axis=0)
+    grid = (N // tile,)
+    return pl.pallas_call(
+        functools.partial(_unique_kernel),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, C), lambda i: (i, 0)),
+                  pl.BlockSpec((tile, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        interpret=interpret,
+    )(data, shifted)

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init).  Only the dry-run forces 512 host devices.
+
+import argparse
+import json
+import math
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as RL
+from repro.configs.base import ARCHS, SHAPES, get_config, supported_cells
+from repro.launch.mesh import make_mesh_ctx, make_production_mesh
+from repro.models import model as M
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def cell_id(arch, shape, multi_pod, tag=""):
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    sfx = f"-{tag}" if tag else ""
+    return f"{arch}.{shape}.{mesh}{sfx}"
+
+
+def run_glog_cell(multi_pod: bool, tag: str = "") -> dict:
+    """Dry-run of the paper's own workload: the distributed TG/SNE
+    materialization loop lowered on the production mesh."""
+    from repro.engine.distributed import DistConfig, lower_distributed_tc
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    axis = ("pod", "data") if multi_pod else ("data",)
+    cfg = DistConfig(shard_cap=1 << 20, delta_cap=1 << 18, bucket_cap=1 << 10,
+                     axis=axis)
+    lowered = lower_distributed_tc(mesh, cfg)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+               + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rr = RL.analyze("glog_tc", "materialize", "2x16x16" if multi_pod else
+                    "16x16", chips, cost, hlo, model_flops=0.0,
+                    mem_stats=per_dev)
+    return {"cell": cell_id("glog_tc", "materialize", multi_pod, tag),
+            "arch": "glog_tc", "shape": "materialize",
+            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+            "status": "ok", "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {"per_device_total": per_dev,
+                       "argument_bytes": mem.argument_size_in_bytes,
+                       "temp_bytes": mem.temp_size_in_bytes,
+                       "output_bytes": mem.output_size_in_bytes,
+                       "alias_bytes": mem.alias_size_in_bytes},
+            "roofline": rr.to_json()}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             tag: str = "", overrides=None) -> dict:
+    if arch == "glog_tc":
+        return run_glog_cell(multi_pod, tag)
+    t0 = time.time()
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mcx = make_mesh_ctx(mesh)
+    chips = math.prod(mesh.devices.shape)
+    mdl = M.build(cfg, mcx)
+
+    ok, reason = supported_cells(cfg)[shape_name]
+    rec = {"cell": cell_id(arch, shape_name, multi_pod, tag),
+           "arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips}
+    if not ok:
+        rec.update({"status": "skipped", "reason": reason})
+        return rec
+
+    params_abs = mdl.abstract_params()
+    params_sh = mdl.param_shardings()
+    specs = mdl.input_specs(shape)
+    repl = NamedSharding(mesh, P())
+
+    with mesh:
+        if shape.kind == "train":
+            opt_abs = mdl.abstract_opt_state()
+            opt_sh = mdl.opt_shardings()
+            batch_sh = mdl.batch_shardings(specs["batch"])
+            fn = jax.jit(
+                mdl.train_step,
+                in_shardings=(params_sh, opt_sh, batch_sh, repl),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1))
+            lowered = fn.lower(params_abs, opt_abs, specs["batch"],
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            batch_sh = mdl.batch_shardings(specs["batch"])
+            cache_sh = mdl.cache_shardings(shape)
+            tok_sh = mdl.batch_shardings(
+                jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32))
+            fn = jax.jit(mdl.prefill_step,
+                         in_shardings=(params_sh, batch_sh),
+                         out_shardings=(tok_sh, cache_sh))
+            lowered = fn.lower(params_abs, specs["batch"])
+        else:  # decode
+            cache_sh = mdl.cache_shardings(shape)
+            tok_sh = mdl.batch_shardings(specs["token"])
+            out_tok_sh = mdl.batch_shardings(
+                jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32))
+            fn = jax.jit(mdl.decode_step,
+                         in_shardings=(params_sh, cache_sh, tok_sh, repl),
+                         out_shardings=(out_tok_sh, cache_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_abs, specs["caches"], specs["token"],
+                               specs["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    mf = RL.model_flops_estimate(cfg, shape)
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rr = RL.analyze(arch, shape_name, rec["mesh"], chips, cost, hlo, mf,
+                    mem_stats=per_dev_bytes)
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_total": per_dev_bytes,
+        },
+        "roofline": rr.to_json(),
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run every (arch x shape x mesh) cell in "
+                         "subprocesses; resumable")
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", default="",
+                    help="comma-separated cfg overrides k=v (perf experiments)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.sweep:
+        cells = []
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+        for arch, shape, mp in cells:
+            cid = cell_id(arch, shape, mp, args.tag)
+            path = os.path.join(args.out, cid + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {cid}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--out", args.out]
+            if mp:
+                cmd.append("--multi-pod")
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            if args.override:
+                cmd += ["--override", args.override]
+            print(f"[run ] {cid}", flush=True)
+            r = subprocess.run(cmd)
+            if r.returncode != 0:
+                with open(path, "w") as f:
+                    json.dump({"cell": cid, "status": "error",
+                               "returncode": r.returncode}, f)
+        return
+
+    overrides = {}
+    if args.override:
+        for kv in args.override.split(","):
+            k, v = kv.split("=")
+            try:
+                v = json.loads(v)
+            except Exception:
+                pass
+            overrides[k] = v
+
+    cid = cell_id(args.arch, args.shape, args.multi_pod, args.tag)
+    path = os.path.join(args.out, cid + ".json")
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.out,
+                       args.tag, overrides or None)
+    except Exception as e:
+        rec = {"cell": cid, "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    status = rec.get("status")
+    print(f"{cid}: {status}")
+    if status == "ok":
+        r = rec["roofline"]
+        print(f"  compute={r['compute_s']:.4g}s memory={r['memory_s']:.4g}s "
+              f"collective={r['collective_s']:.4g}s bottleneck={r['bottleneck']}"
+              f" useful={r['useful_ratio']:.3f} "
+              f"mem/dev={rec['memory']['per_device_total']/1e9:.2f}GB")
+    elif status == "error":
+        print(rec.get("traceback", "")[-2000:])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Builds the mesh (or a 512-device simulated production mesh with
+``--simulate-pod``), the model for the selected architecture, the data
+pipeline (synthetic tokens or a KB-linearized stream), and runs the fault-
+tolerant training loop (checkpoint/resume/preemption).
+
+On a real TPU slice, run the same module under your process launcher; the
+mesh builder picks up all visible devices.  Recommended XLA flags for
+overlap (latency-hiding scheduler) are appended when --tpu-flags is set.
+"""
+import os
+import sys
+
+if "--simulate-pod" in sys.argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "--tpu-flags" in sys.argv:
+    os.environ["LIBTPU_INIT_ARGS"] = os.environ.get(
+        "LIBTPU_INIT_ARGS", "") + " --xla_enable_async_collective_permute=true"
+    os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+        " --xla_tpu_enable_latency_hiding_scheduler=true"
+
+import argparse
+
+import jax
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.mesh import make_mesh_ctx, make_production_mesh, \
+    make_host_mesh
+from repro.models import model as M
+from repro.train.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--simulate-pod", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tpu-flags", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.simulate_pod:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = make_host_mesh(dp=1, tp=jax.device_count())
+    mcx = make_mesh_ctx(mesh)
+    mdl = M.build(cfg, mcx)
+    n = cfg.param_counts()["total"]
+    print(f"[launch] arch={cfg.name} params={n/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)} devices={mesh.devices.size}")
+    data = SyntheticTokens(cfg.vocab_size, args.batch, args.seq)
+    train(mdl, data, steps=args.steps, ckpt_dir=args.ckpt,
+          ckpt_every=args.ckpt_every)
+
+
+if __name__ == "__main__":
+    main()

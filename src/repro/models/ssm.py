@@ -1,0 +1,321 @@
+"""State-space model blocks: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+TPU adaptation: both use *chunked* scans — within a chunk the recurrence is
+evaluated in matmul form (MXU-friendly) or via a bounded associative scan;
+chunk boundary states are carried by a short sequential ``lax.scan``.  The
+inner dimension ``d_inner`` is sharded over the model (TP) axis; every op here
+is elementwise or contracting over ``d_inner``/state, so no collectives are
+needed inside a block (in/out projections are column/row-parallel).
+
+Decode carries ``(conv_state, ssm_state)`` per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import MeshCtx
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_mamba1(cfg, rng):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    R, K = cfg.ssm_dt_rank, cfg.ssm_conv
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+    s = 0.02
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (K, di)) * s).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": (jax.random.normal(ks[2], (di, R + 2 * N)) * s).astype(dt),
+        "dt_proj": (jax.random.normal(ks[3], (R, di)) * s).astype(dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * s).astype(dt),
+    }
+
+
+def init_mamba2(cfg, rng):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    K, nh, g = cfg.ssm_conv, cfg.ssm_nheads, cfg.ssm_ngroups
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    s = 0.02
+    d_in_proj = 2 * di + 2 * g * N + nh
+    conv_dim = di + 2 * g * N
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, d_in_proj)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (K, conv_dim)) * s).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),   # gated RMSNorm
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * s).astype(dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+def causal_conv1d(x, w, b, state=None):
+    """x: (B,S,C); w: (K,C).  Returns (y, tail) where tail is the last (K-1)
+    inputs (for decode).  If ``state`` (B,K-1,C) given, it is prepended."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + S, :] * w[i] for i in range(K))
+    tail = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y + b, tail
+
+
+def conv1d_step(x, w, b, state):
+    """x: (B,C) one step; state: (B,K-1,C)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([state, x[:, None]], axis=1)      # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", xp, w) + b
+    return y, xp[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# chunked diagonal selective scan (mamba1)
+#   h_t = a_t * h_{t-1} + u_t ;   a, u: (B, S, C, N)
+# ---------------------------------------------------------------------------
+def chunked_diag_scan(a, u, chunk: int, h0=None):
+    B, S, C, N = a.shape
+    c = min(chunk, S)
+    S_real = S
+    if S % c:
+        pad = c - S % c
+        # identity padding: decay 1, input 0 — state passes through unchanged
+        a = jnp.concatenate([a, jnp.ones((B, pad, C, N), a.dtype)], axis=1)
+        u = jnp.concatenate([u, jnp.zeros((B, pad, C, N), u.dtype)], axis=1)
+        S = S + pad
+    nc = S // c
+    a_c = a.reshape(B, nc, c, C, N)
+    u_c = u.reshape(B, nc, c, C, N)
+
+    def combine(l, r):
+        al, ul = l
+        ar, ur = r
+        return al * ar, ul * ar + ur
+
+    # within-chunk prefix: h_t = A_cum * h_in + U_cum
+    A_cum, U_cum = jax.lax.associative_scan(
+        combine, (a_c, u_c), axis=2)
+
+    def boundary(h, xs):
+        A_last, U_last = xs                                 # (B,C,N)
+        h_next = A_last * h + U_last
+        return h_next, h
+
+    if h0 is None:
+        h0 = jnp.zeros((B, C, N), a.dtype)
+    _, h_ins = jax.lax.scan(
+        boundary, h0,
+        (jnp.moveaxis(A_cum[:, :, -1], 1, 0), jnp.moveaxis(U_cum[:, :, -1], 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                       # (B,nc,C,N)
+    h_all = A_cum * h_ins[:, :, None] + U_cum               # (B,nc,c,C,N)
+    return h_all.reshape(B, S, C, N)[:, :S_real]
+
+
+def mamba1_fwd(p, x, cfg, mcx: Optional[MeshCtx], state=None):
+    """x: (B,S,d) -> (B,S,d).  state=(conv_state, h) enables streaming."""
+    B, S, d = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    if mcx is not None:
+        xz = mcx.shard(xz, mcx.dp, None, mcx.tp)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[0] if state is not None else None
+    xin, conv_tail = causal_conv1d(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bsc,ce->bse", xin, p["x_proj"])
+    dt_r, Bmat, Cmat = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jnp.einsum("bsr,rc->bsc", dt_r, p["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                 # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                # (di,N)
+    a = jnp.exp(dt[..., None] * A)                          # (B,S,di,N)
+    u = (dt[..., None] * Bmat[:, :, None, :].astype(jnp.float32)
+         * xin[..., None].astype(jnp.float32))              # (B,S,di,N)
+    h0 = state[1] if state is not None else None
+    h = chunked_diag_scan(a, u, cfg.ssm_chunk, h0)          # (B,S,di,N)
+    y = jnp.einsum("bscn,bsn->bsc", h, Cmat.astype(jnp.float32))
+    y = y + p["D"] * xin.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsc,cd->bsd", y.astype(x.dtype), p["out_proj"])
+    if state is not None:
+        return out, (conv_tail, h[:, -1])
+    return out
+
+
+def mamba1_step(p, x, cfg, state):
+    """Single decode step.  x: (B,d); state=(conv_state (B,K-1,di), h (B,di,N))."""
+    conv_state, h = state
+    N, R = cfg.ssm_state, cfg.ssm_dt_rank
+    xz = jnp.einsum("bd,de->be", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = conv1d_step(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    proj = jnp.einsum("bc,ce->be", xin, p["x_proj"])
+    dt_r, Bv, Cv = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jnp.einsum("br,rc->bc", dt_r, p["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)                          # (B,di,N)
+    u = dt[..., None] * Bv[:, None, :].astype(jnp.float32) * \
+        xin[..., None].astype(jnp.float32)
+    h = a * h + u
+    y = jnp.einsum("bcn,bn->bc", h, Cv.astype(jnp.float32))
+    y = y + p["D"] * xin.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bc,cd->bd", y.astype(x.dtype), p["out_proj"])
+    return out, (conv_state, h)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (chunked, matmul form)
+# ---------------------------------------------------------------------------
+def _segsum(log_a):
+    """log_a: (..., c).  Returns (..., c, c) with L[i,j] = sum_{j<k<=i} log_a[k]
+    for j<=i else -inf."""
+    c = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]              # sum_{j<k<=i}
+    mask = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, log_a, Bm, Cm, chunk: int, h0=None):
+    """SSD scan.  xh: (B,S,nh,hd); log_a: (B,S,nh); Bm,Cm: (B,S,g,N).
+    Returns y (B,S,nh,hd) and final state (B,nh,hd,N)."""
+    B, S, nh, hd = xh.shape
+    g, N = Bm.shape[2], Bm.shape[3]
+    rep = nh // g
+    c = min(chunk, S)
+    S_real = S
+    if S % c:
+        pad = c - S % c
+        xh = jnp.concatenate([xh, jnp.zeros((B, pad, nh, hd), xh.dtype)], 1)
+        log_a = jnp.concatenate(
+            [log_a, jnp.zeros((B, pad, nh), log_a.dtype)], 1)
+        Bm = jnp.concatenate([Bm, jnp.zeros((B, pad, g, N), Bm.dtype)], 1)
+        Cm = jnp.concatenate([Cm, jnp.zeros((B, pad, g, N), Cm.dtype)], 1)
+        S = S + pad
+    nc = S // c
+    xc = xh.reshape(B, nc, c, nh, hd)
+    la = log_a.reshape(B, nc, c, nh)
+    Bc = jnp.repeat(Bm.reshape(B, nc, c, g, N), rep, axis=3)
+    Cc = jnp.repeat(Cm.reshape(B, nc, c, g, N), rep, axis=3)
+
+    # --- intra-chunk (quadratic in c, matmul form) ---
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(la, -1, 2)))        # (B,nc,nh,c,c)
+    scores = jnp.einsum("bzchn,bzshn->bzhcs", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    scores = scores * Lmat
+    y_intra = jnp.einsum("bzhcs,bzshd->bzchd", scores.astype(xh.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states: S_z = sum_j decay(end..j) B_j x_j^T ---
+    cum = jnp.cumsum(la, axis=2)                            # (B,nc,c,nh)
+    total = cum[:, :, -1:]
+    decay_to_end = jnp.exp(total - cum)                     # (B,nc,c,nh)
+    Bx = jnp.einsum("bzshn,bzshd,bzsh->bzhdn", Bc, xc, decay_to_end.astype(xh.dtype),
+                    preferred_element_type=jnp.float32)     # (B,nc,nh,hd,N)
+
+    # --- inter-chunk recurrence over chunk boundaries ---
+    A_chunk = jnp.exp(total[:, :, 0])                       # (B,nc,nh)
+
+    def boundary(h, xs):
+        a_z, s_z = xs                                       # (B,nh),(B,nh,hd,N)
+        h_next = a_z[..., None, None] * h + s_z
+        return h_next, h
+
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    h_fin, h_ins = jax.lax.scan(
+        boundary, h0.astype(jnp.float32),
+        (jnp.moveaxis(A_chunk, 1, 0), jnp.moveaxis(Bx.astype(jnp.float32), 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                       # (B,nc,nh,hd,N)
+
+    # --- inter-chunk contribution to outputs ---
+    decay_from_start = jnp.exp(cum)                         # (B,nc,c,nh)
+    y_inter = jnp.einsum("bzchn,bzndn,bzch->bzchd", Cc,
+                         h_ins.astype(xh.dtype),
+                         decay_from_start.astype(xh.dtype),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)[:, :S_real]
+    return y.astype(xh.dtype), h_fin
+
+
+def mamba2_fwd(p, x, cfg, mcx: Optional[MeshCtx], state=None):
+    """x: (B,S,d)."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    nh, g, hd = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    if mcx is not None:
+        zxbcdt = mcx.shard(zxbcdt, mcx.dp, None, mcx.tp)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * N], axis=-1)
+    conv_state = state[0] if state is not None else None
+    xbc, conv_tail = causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(xbc, [di, di + g * N], axis=-1)
+    xh = xin.reshape(B, S, nh, hd)
+    Bm = Bm.reshape(B, S, g, N)
+    Cm = Cm.reshape(B, S, g, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                # (nh,)
+    log_a = dt * A                                          # (B,S,nh)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    h0 = state[1] if state is not None else None
+    y, h_fin = ssd_chunked(xdt, log_a, Bm, Cm, cfg.ssm_chunk, h0)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32).astype(y.dtype)
+    y = y.reshape(B, S, di)
+    # gated RMSNorm
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    out = jnp.einsum("bsc,cd->bsd", yf.astype(x.dtype), p["out_proj"])
+    if state is not None:
+        return out, (conv_tail, h_fin)
+    return out
+
+
+def mamba2_step(p, x, cfg, state):
+    """Single decode step.  x: (B,d); state=(conv (B,K-1,conv_dim), h (B,nh,hd,N))."""
+    conv_state, h = state
+    di, N = cfg.d_inner, cfg.ssm_state
+    nh, g, hd = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bd,de->be", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * N], axis=-1)
+    xbc, conv_state = conv1d_step(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xin, Bv, Cv = jnp.split(xbc, [di, di + g * N], axis=-1)
+    xhh = xin.reshape(-1, nh, hd)
+    Bv = jnp.repeat(Bv.reshape(-1, g, N), nh // g, axis=1)
+    Cv = jnp.repeat(Cv.reshape(-1, g, N), nh // g, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))                # (B,nh)
+    u = jnp.einsum("bhd,bhn->bhdn", (xhh * dt[..., None].astype(xhh.dtype)
+                                     ).astype(jnp.float32), Bv.astype(jnp.float32))
+    h = a[..., None, None] * h + u
+    y = jnp.einsum("bhdn,bhn->bhd", h, Cv.astype(jnp.float32))
+    y = y + p["D"][:, None] * xhh.astype(jnp.float32)
+    y = y.reshape(-1, di)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"]
+    out = jnp.einsum("bc,cd->bd", yf.astype(x.dtype), p["out_proj"])
+    return out, (conv_state, h)

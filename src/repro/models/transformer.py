@@ -1,0 +1,428 @@
+"""Model stacks: decoder LMs, encoder-only, MoE, SSM and hybrid variants.
+
+Layer stacks are ``lax.scan`` over parameter pytrees stacked on a leading
+layer axis (compile-time and HLO-size friendly), with ``jax.checkpoint``
+(remat) applied to the layer body.  Prefill/decode thread KV / SSM caches
+through the scan.  Hybrid (zamba2) keeps a *shared* attention+MLP block whose
+per-application KV caches live in a compact (n_attn_slots, ...) carry.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import MeshCtx
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / fwd
+# ---------------------------------------------------------------------------
+def init_layer(cfg, rng, mcx, kind: str):
+    """kind: dense | moe | moe_dense | ssm | hybrid"""
+    ks = jax.random.split(rng, 4)
+    p = {}
+    if kind in ("dense", "moe", "moe_dense"):
+        p["ln_attn"] = L.init_norm(cfg)
+        if cfg.attn_type == "mla":
+            p["attn"] = L.init_mla(cfg, ks[0], mcx)
+        else:
+            p["attn"] = L.init_attention(cfg, ks[0], mcx)
+        if not cfg.parallel_block:
+            p["ln_mlp"] = L.init_norm(cfg)
+        if kind == "moe":
+            p["moe"] = MOE.init_moe(cfg, ks[1])
+        elif kind == "moe_dense":
+            p["mlp"] = L.init_mlp(cfg, ks[1], cfg.dense_d_ff)
+        else:
+            p["mlp"] = L.init_mlp(cfg, ks[1])
+    elif kind == "ssm":
+        p["ln"] = L.init_norm(cfg)
+        p["ssm"] = SSM.init_mamba1(cfg, ks[0])
+    elif kind == "hybrid":
+        p["ln"] = L.init_norm(cfg)
+        p["ssm"] = SSM.init_mamba2(cfg, ks[0])
+    return p
+
+
+def init_shared_block(cfg, rng, mcx):
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln_attn": L.init_norm(cfg),
+        "attn": L.init_attention(cfg, ks[0], mcx),
+        "ln_mlp": L.init_norm(cfg),
+        "mlp": L.init_mlp(cfg, ks[1]),
+    }
+
+
+def attn_block_fwd(p, x, cfg, mcx, positions, *, causal, return_kv=False):
+    h = L.apply_norm(p["ln_attn"], x, cfg)
+    if cfg.attn_type == "mla":
+        out = L.mla_fwd(p["attn"], h, cfg, mcx, positions=positions,
+                        return_kv=return_kv)
+    else:
+        out = L.attention_fwd(p["attn"], h, cfg, mcx, positions=positions,
+                              causal=causal, return_kv=return_kv)
+    if return_kv:
+        attn_y, kv = out
+    else:
+        attn_y, kv = out, None
+
+    if cfg.parallel_block:
+        # cohere-style: one shared input norm, attn+mlp in parallel
+        y = x + attn_y + L.apply_mlp(p["mlp"], h, cfg, mcx)
+        return (y, kv) if return_kv else y
+
+    x = x + attn_y
+    h2 = L.apply_norm(p["ln_mlp"], x, cfg)
+    if "moe" in p:
+        mlp_y, aux = MOE.moe_fwd(p["moe"], h2, cfg, mcx)
+    else:
+        mlp_y, aux = L.apply_mlp(p["mlp"], h2, cfg, mcx), 0.0
+    y = x + mlp_y
+    if return_kv:
+        return (y, aux, kv)
+    return y, aux
+
+
+def attn_block_decode(p, x, cache, pos, cfg, mcx):
+    h = L.apply_norm(p["ln_attn"], x, cfg)
+    if cfg.attn_type == "mla":
+        attn_y, cache = L.mla_decode_attention(p["attn"], h, cache, pos, cfg, mcx)
+    else:
+        attn_y, cache = L.gqa_decode_attention(p["attn"], h, cache, pos, cfg, mcx)
+    if cfg.parallel_block:
+        return x + attn_y + L.apply_mlp(p["mlp"], h, cfg, mcx), cache
+    x = x + attn_y
+    h2 = L.apply_norm(p["ln_mlp"], x, cfg)
+    if "moe" in p:
+        mlp_y, _ = MOE.moe_fwd(p["moe"], h2, cfg, mcx)
+    else:
+        mlp_y = L.apply_mlp(p["mlp"], h2, cfg, mcx)
+    return x + mlp_y, cache
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+def _layer_kinds(cfg):
+    if cfg.family in ("dense", "vlm", "audio"):
+        return ["dense"] * cfg.num_layers
+    if cfg.family == "moe":
+        return (["moe_dense"] * cfg.num_dense_layers
+                + ["moe"] * (cfg.num_layers - cfg.num_dense_layers))
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.num_layers
+    if cfg.family == "hybrid":
+        return ["hybrid"] * cfg.num_layers
+    raise ValueError(cfg.family)
+
+
+def hybrid_attn_slots(cfg):
+    """Layer indices after which the shared block applies, and their slots."""
+    idxs = [i for i in range(cfg.num_layers)
+            if (i + 1) % cfg.hybrid_attn_every == 0]
+    return idxs
+
+
+def init_stack(cfg, rng, mcx):
+    kinds = _layer_kinds(cfg)
+    ks = jax.random.split(rng, 8)
+    dt = jnp.dtype(cfg.dtype)
+    V = L.pad_to(cfg.vocab_size, 256)      # Megatron-style vocab padding
+    params = {}
+    params["emb"] = (jax.random.normal(ks[0], (V, cfg.d_model))
+                     * 0.02).astype(dt)
+    if not cfg.tie_embeddings:
+        params["unemb"] = (jax.random.normal(
+            ks[1], (cfg.d_model, V)) * 0.02).astype(dt)
+    params["ln_final"] = L.init_norm(cfg)
+
+    # group contiguous identical kinds into scanned stacks
+    groups = []
+    start = 0
+    for i in range(1, len(kinds) + 1):
+        if i == len(kinds) or kinds[i] != kinds[start]:
+            groups.append((kinds[start], start, i))
+            start = i
+    stacks = []
+    rlayers = jax.random.split(ks[2], len(kinds))
+    for kind, lo, hi in groups:
+        rs = jnp.stack([rlayers[i] for i in range(lo, hi)])
+        stacked = jax.vmap(lambda r: init_layer(cfg, r, mcx, kind))(rs)
+        stacks.append(stacked)
+    params["stacks"] = stacks
+
+    if cfg.family == "hybrid":
+        params["shared"] = init_shared_block(cfg, ks[3], mcx)
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": (jax.random.normal(ks[4], (2 * cfg.d_model, cfg.d_model))
+                     * 0.02).astype(dt),
+            "ln_h": L.init_norm(cfg),
+            "ln_e": L.init_norm(cfg),
+            "layer": init_layer(cfg, ks[5], mcx,
+                                "moe" if cfg.family == "moe" else "dense"),
+        }
+    return params
+
+
+def stack_groups(cfg):
+    kinds = _layer_kinds(cfg)
+    groups = []
+    start = 0
+    for i in range(1, len(kinds) + 1):
+        if i == len(kinds) or kinds[i] != kinds[start]:
+            groups.append((kinds[start], start, i))
+            start = i
+    return groups
+
+
+def _maybe_remat(f, cfg):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f)
+
+
+# ---------------------------------------------------------------------------
+# training / encoder forward
+# ---------------------------------------------------------------------------
+def forward_train(params, x, cfg, mcx: MeshCtx, positions):
+    """x: hidden after embedding (B,S,d).  Returns (hidden, aux_loss)."""
+    causal = not cfg.is_encoder
+    aux_total = 0.0
+    groups = stack_groups(cfg)
+
+    if cfg.family == "hybrid":
+        slots = hybrid_attn_slots(cfg)
+        apply_flags = jnp.zeros((cfg.num_layers,), jnp.bool_).at[
+            jnp.array(slots)].set(True)
+
+        def body(carry, xs):
+            h = carry
+            lp, flag = xs
+            hn = L.apply_norm(lp["ln"], h, cfg)
+            h = h + SSM.mamba2_fwd(lp["ssm"], hn, cfg, mcx)
+
+            def with_attn(h):
+                y, _ = attn_block_fwd(params["shared"], h, cfg, mcx,
+                                      positions, causal=causal)
+                return y
+            h = jax.lax.cond(flag, with_attn, lambda h: h, h)
+            return h, None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, (params["stacks"][0], apply_flags))
+        return x, aux_total
+
+    for (kind, lo, hi), stacked in zip(groups, params["stacks"]):
+        if kind == "ssm":
+            def body(h, lp):
+                hn = L.apply_norm(lp["ln"], h, cfg)
+                return h + SSM.mamba1_fwd(lp["ssm"], hn, cfg, mcx), None
+            body = _maybe_remat(body, cfg)
+            x, _ = jax.lax.scan(body, x, stacked)
+        else:
+            def body(carry, lp):
+                h, aux = carry
+                if cfg.parallel_block:
+                    y = attn_block_fwd(lp, h, cfg, mcx, positions,
+                                       causal=causal)
+                    da = 0.0
+                else:
+                    y, da = attn_block_fwd(lp, h, cfg, mcx, positions,
+                                           causal=causal)
+                return (y, aux + da), None
+            body = _maybe_remat(body, cfg)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked)
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + emit caches
+# ---------------------------------------------------------------------------
+def forward_prefill(params, x, cfg, mcx: MeshCtx, positions):
+    """Returns (hidden, caches).  caches layout depends on family."""
+    causal = not cfg.is_encoder
+    groups = stack_groups(cfg)
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            hn = L.apply_norm(lp["ln"], h, cfg)
+            B = h.shape[0]
+            K = cfg.ssm_conv
+            zero_state = (jnp.zeros((B, K - 1, cfg.d_inner), h.dtype),
+                          jnp.zeros((B, cfg.d_inner, cfg.ssm_state),
+                                    jnp.float32))
+            y, st = SSM.mamba1_fwd(lp["ssm"], hn, cfg, mcx, state=zero_state)
+            return h + y, st
+        x, caches = jax.lax.scan(body, x, params["stacks"][0])
+        return x, {"ssm": caches}
+
+    if cfg.family == "hybrid":
+        slots = hybrid_attn_slots(cfg)
+        n_slots = len(slots)
+        apply_flags = jnp.zeros((cfg.num_layers,), jnp.bool_).at[
+            jnp.array(slots)].set(True)
+        slot_idx = jnp.zeros((cfg.num_layers,), jnp.int32)
+        for si, li in enumerate(slots):
+            slot_idx = slot_idx.at[li].set(si)
+        B, S = x.shape[0], x.shape[1]
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        kc0 = jnp.zeros((n_slots, B, S, KV, hd), x.dtype)
+        vc0 = jnp.zeros((n_slots, B, S, KV, hd), x.dtype)
+        kc0 = mcx.shard(kc0, None, mcx.dp, mcx.tp, None, None)
+        vc0 = mcx.shard(vc0, None, mcx.dp, mcx.tp, None, None)
+
+        def body(carry, xs):
+            h, kc, vc = carry
+            lp, flag, si = xs
+            hn = L.apply_norm(lp["ln"], h, cfg)
+            B = h.shape[0]
+            K = cfg.ssm_conv
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+            zero_state = (jnp.zeros((B, K - 1, conv_dim), h.dtype),
+                          jnp.zeros((B, cfg.ssm_nheads, cfg.ssm_head_dim,
+                                     cfg.ssm_state), jnp.float32))
+            y, st = SSM.mamba2_fwd(lp["ssm"], hn, cfg, mcx, state=zero_state)
+            h = h + y
+
+            def with_attn(op):
+                h, kc, vc = op
+                y, _, kv = attn_block_fwd(params["shared"], h, cfg, mcx,
+                                          positions, causal=True,
+                                          return_kv=True)
+                k_new, v_new = kv
+                kc = jax.lax.dynamic_update_slice(
+                    kc, k_new[None].astype(kc.dtype), (si, 0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(
+                    vc, v_new[None].astype(vc.dtype), (si, 0, 0, 0, 0))
+                return y, kc, vc
+
+            h, kc, vc = jax.lax.cond(flag, with_attn, lambda op: op,
+                                     (h, kc, vc))
+            return (h, kc, vc), st
+
+        (x, kc, vc), ssm_states = jax.lax.scan(
+            body, (x, kc0, vc0), (params["stacks"][0], apply_flags, slot_idx))
+        return x, {"ssm": ssm_states, "k": kc, "v": vc}
+
+    # attention families (dense / vlm / moe / audio)
+    caches_k, caches_v, caches_ckv, caches_kr = [], [], [], []
+    for (kind, lo, hi), stacked in zip(groups, params["stacks"]):
+        def body(h, lp):
+            if cfg.parallel_block:
+                y, kv = attn_block_fwd(lp, h, cfg, mcx, positions,
+                                       causal=causal, return_kv=True)
+            else:
+                y, _, kv = attn_block_fwd(lp, h, cfg, mcx, positions,
+                                          causal=causal, return_kv=True)
+            return y, kv
+        x, kv = jax.lax.scan(body, x, stacked)
+        if cfg.attn_type == "mla":
+            caches_ckv.append(kv[0])
+            caches_kr.append(kv[1])
+        else:
+            caches_k.append(kv[0])
+            caches_v.append(kv[1])
+    if cfg.attn_type == "mla":
+        return x, {"c_kv": jnp.concatenate(caches_ckv, axis=0),
+                   "k_rope": jnp.concatenate(caches_kr, axis=0)}
+    return x, {"k": jnp.concatenate(caches_k, axis=0),
+               "v": jnp.concatenate(caches_v, axis=0)}
+
+
+# ---------------------------------------------------------------------------
+# decode: one token, caches carried
+# ---------------------------------------------------------------------------
+def forward_decode(params, x, caches, pos, cfg, mcx: MeshCtx):
+    """x: (B,1,d).  Returns (hidden, new_caches)."""
+    groups = stack_groups(cfg)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            hn = L.apply_norm(lp["ln"], h[:, 0], cfg)
+            y, st = SSM.mamba1_step(lp["ssm"], hn, cfg, st)
+            return h + y[:, None], st
+        x, ssm_states = jax.lax.scan(body, x, (params["stacks"][0],
+                                               caches["ssm"]))
+        return x, {"ssm": ssm_states}
+
+    if cfg.family == "hybrid":
+        slots = hybrid_attn_slots(cfg)
+        apply_flags = jnp.zeros((cfg.num_layers,), jnp.bool_).at[
+            jnp.array(slots)].set(True)
+        slot_idx = jnp.zeros((cfg.num_layers,), jnp.int32)
+        for si, li in enumerate(slots):
+            slot_idx = slot_idx.at[li].set(si)
+
+        def body(carry, xs):
+            h, kc, vc = carry
+            lp, st, flag, si = xs
+            hn = L.apply_norm(lp["ln"], h[:, 0], cfg)
+            y, st = SSM.mamba2_step(lp["ssm"], hn, cfg, st)
+            h = h + y[:, None]
+
+            def with_attn(op):
+                h, kc, vc = op
+                cache = {"k": jax.lax.dynamic_index_in_dim(kc, si, 0, False),
+                         "v": jax.lax.dynamic_index_in_dim(vc, si, 0, False)}
+                y, cache = attn_block_decode(params["shared"], h, cache, pos,
+                                             cfg, mcx)
+                kc = jax.lax.dynamic_update_index_in_dim(kc, cache["k"], si, 0)
+                vc = jax.lax.dynamic_update_index_in_dim(vc, cache["v"], si, 0)
+                return y, kc, vc
+
+            h, kc, vc = jax.lax.cond(flag, with_attn, lambda op: op,
+                                     (h, kc, vc))
+            return (h, kc, vc), st
+
+        (x, kc, vc), ssm_states = jax.lax.scan(
+            body, (x, caches["k"], caches["v"]),
+            (params["stacks"][0], caches["ssm"], apply_flags, slot_idx))
+        return x, {"ssm": ssm_states, "k": kc, "v": vc}
+
+    # attention families
+    new_k, new_v, new_ckv, new_kr = [], [], [], []
+    off = 0
+    for (kind, lo, hi), stacked in zip(groups, params["stacks"]):
+        n = hi - lo
+        if cfg.attn_type == "mla":
+            sl = {"c_kv": caches["c_kv"][off:off + n],
+                  "k_rope": caches["k_rope"][off:off + n]}
+            def body(h, xs):
+                lp, ckv, kr = xs
+                y, cache = attn_block_decode(lp, h, {"c_kv": ckv, "k_rope": kr},
+                                             pos, cfg, mcx)
+                return y, (cache["c_kv"], cache["k_rope"])
+            x, (ckv, kr) = jax.lax.scan(body, x, (stacked, sl["c_kv"],
+                                                  sl["k_rope"]))
+            new_ckv.append(ckv)
+            new_kr.append(kr)
+        else:
+            sl = {"k": caches["k"][off:off + n], "v": caches["v"][off:off + n]}
+            def body(h, xs):
+                lp, k, v = xs
+                y, cache = attn_block_decode(lp, h, {"k": k, "v": v}, pos,
+                                             cfg, mcx)
+                return y, (cache["k"], cache["v"])
+            x, (k, v) = jax.lax.scan(body, x, (stacked, sl["k"], sl["v"]))
+            new_k.append(k)
+            new_v.append(v)
+        off += n
+    if cfg.attn_type == "mla":
+        return x, {"c_kv": jnp.concatenate(new_ckv, axis=0),
+                   "k_rope": jnp.concatenate(new_kr, axis=0)}
+    return x, {"k": jnp.concatenate(new_k, axis=0),
+               "v": jnp.concatenate(new_v, axis=0)}

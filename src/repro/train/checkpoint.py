@@ -1,0 +1,128 @@
+"""Checkpointing: async host-side save, elastic reshard-on-restore.
+
+* ``save(path, step, tree)`` — gathers leaves to host and writes an .npz +
+  manifest; the write happens on a background thread (training continues).
+* ``restore(path, abstract_tree, shardings)`` — loads the newest step and
+  ``device_put``s each leaf with the *target* shardings, which may belong to
+  a different mesh shape than the one that saved it (elastic scaling: the
+  checkpoint is mesh-agnostic host data).
+* ``latest_step(path)`` — resume discovery.
+
+The manifest also carries the data-pipeline state so input streams resume
+deterministically.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [v for _, v in flat]
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "MANIFEST.json")):
+                steps.append(int(d.split("_")[1]))
+        return max(steps) if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[dict] = None,
+             blocking: bool = False):
+        """Gather to host, then write asynchronously."""
+        self.wait()
+        names, leaves, _ = _flatten_with_names(tree)
+        # device->host gather; npz has no bf16 support: upcast to f32
+        def to_host(l):
+            h = np.asarray(l)
+            if h.dtype not in (np.float64, np.float32, np.float16, np.int64,
+                               np.int32, np.int16, np.int8, np.uint32,
+                               np.uint8, np.bool_):
+                h = h.astype(np.float32)
+            return h
+        host = [to_host(l) for l in leaves]
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{f"a{i}": h for i, h in enumerate(host)})
+            manifest = {"step": step, "names": names,
+                        "time": time.time(), "extra": extra or {}}
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                       if d.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, abstract_tree, shardings=None,
+                step: Optional[int] = None):
+        """Returns (tree, extra).  ``shardings`` (same structure) places each
+        leaf on the *current* mesh — elastic resharding is implicit."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        names, abs_leaves, treedef = _flatten_with_names(abstract_tree)
+        assert names == manifest["names"], "checkpoint/tree structure mismatch"
+        sh_leaves = None
+        if shardings is not None:
+            _, sh_leaves, _ = _flatten_with_names(shardings)
+        out = []
+        for i, (name, ab) in enumerate(zip(names, abs_leaves)):
+            h = data[f"a{i}"]
+            assert tuple(h.shape) == tuple(ab.shape), (name, h.shape, ab.shape)
+            if sh_leaves is not None:
+                arr = jax.device_put(h, sh_leaves[i])
+            else:
+                arr = jax.device_put(h)
+            if arr.dtype != ab.dtype:
+                arr = arr.astype(ab.dtype)   # e.g. f32 -> bf16 back-cast
+            out.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        return tree, manifest.get("extra", {})

@@ -1,0 +1,63 @@
+"""Training loop: jit'd step, periodic async checkpointing, preemption-safe
+exit, resumption (incl. data-pipeline state), straggler timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import PreemptionGuard, StepTimer
+from repro.train import optimizer as OPT
+
+
+def train(model, data, *, steps: int, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 100, log_every: int = 10,
+          resume: bool = True, log: Callable = print):
+    """model: repro.models.model.Model; data: pipeline with .next()/.state()."""
+    mcx = model.mcx
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng)
+    opt_state = OPT.init_opt_state(params, model.opt_cfg)
+    start_step = 0
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr and resume and mgr.latest_step() is not None:
+        (params, opt_state), extra = mgr.restore(
+            (model.abstract_params(), model.abstract_opt_state()))
+        start_step = int(extra.get("step", 0))
+        if "data_state" in extra:
+            data.restore(extra["data_state"])
+        log(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(model.train_step, donate_argnums=(0, 1))
+    guard = PreemptionGuard()
+    timer = StepTimer()
+    losses = []
+    for step in range(start_step, steps):
+        batch = {k: jnp.asarray(v) for k, v in data.next().items()}
+        with timer:
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.asarray(step, jnp.int32))
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            log(f"[train] step={step} loss={loss:.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} "
+                f"med_step={timer.median*1e3:.0f}ms "
+                f"stragglers={timer.stragglers}")
+        should_ckpt = mgr and (step + 1) % ckpt_every == 0
+        if mgr and (should_ckpt or guard.requested or step == steps - 1):
+            mgr.save(step + 1, (params, opt_state),
+                     extra={"step": step + 1, "data_state": data.state()},
+                     blocking=guard.requested or step == steps - 1)
+        if guard.requested:
+            log(f"[train] preemption at step {step}: checkpointed, exiting")
+            break
+    guard.restore()
+    if mgr:
+        mgr.wait()
+    return params, opt_state, losses

@@ -1,0 +1,64 @@
+"""Chase variants (paper §3) incl. Example 1 behaviour."""
+import pytest
+
+from repro.core.chase import chase
+from repro.core.terms import example1_program, parse_atom, parse_program
+from repro.core.unify import entails
+
+
+def test_example1_restricted():
+    P = example1_program()
+    B = [parse_atom("r(c1, c2)")]
+    res = chase(P, B, variant="restricted")
+    strs = {str(f) for f in res.facts}
+    assert "R(c1, c2)" in strs
+    assert "T(c2, c1, c2)" in strs
+    assert any(s.startswith("T(c2, c1, _n") for s in strs)
+    assert res.rounds == 2   # paper: stops in the 3rd round w/o new facts
+
+
+def test_skolem_determinism():
+    P = example1_program()
+    B = [parse_atom("r(c1, c2)")]
+    r1 = chase(P, B, variant="skolem")
+    r2 = chase(P, B, variant="skolem")
+    assert {str(f) for f in r1.facts} == {str(f) for f in r2.facts}
+
+
+def test_equivalent_chase_terminates_fes():
+    P = example1_program()
+    B = [parse_atom("r(c1, c2)")]
+    res = chase(P, B, variant="equivalent")
+    assert res.terminated
+    rr = chase(P, B, variant="restricted")
+    assert entails(res.facts, rr.facts) and entails(rr.facts, res.facts)
+
+
+def test_datalog_variants_agree():
+    P = parse_program("""
+        e(X, Y) -> T(X, Y)
+        T(X, Y) & e(Y, Z) -> T(X, Z)
+    """)
+    B = [parse_atom(f"e(v{i}, v{i+1})") for i in range(5)]
+    res_r = chase(P, B, variant="restricted")
+    res_s = chase(P, B, variant="skolem")
+    assert res_r.facts == res_s.facts
+    t_facts = [f for f in res_r.facts if f.pred == "T"]
+    assert len(t_facts) == 15     # all pairs i<j over the 6-node chain
+
+
+def test_trigger_counts_monotone():
+    P = parse_program("""
+        e(X, Y) -> T(X, Y)
+        T(X, Y) & e(Y, Z) -> T(X, Z)
+    """)
+    B = [parse_atom(f"e(v{i}, v{i+1})") for i in range(5)]
+    res = chase(P, B)
+    assert res.triggers >= res.derived
+
+
+def test_nontermination_guard():
+    P = parse_program("r(X, Y) -> exists Z. R(Y, Z)\nR(X, Y) -> exists Z. R(Y, Z)")
+    B = [parse_atom("r(a, b)")]
+    res = chase(P, B, variant="oblivious", max_rounds=5)
+    assert not res.terminated and res.rounds == 5

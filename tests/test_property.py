@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis): system invariants.
+
+* TGmat(P, B) == Ch(P, B) for random Datalog programs (Thm. 24)
+* tglinear is a TG for random linear FES programs (Thm. 10) and minLinear
+  preserves the TG property (Thm. 15)
+* engine materialization == symbolic chase on random instances
+* engine relational ops vs numpy oracles
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.chase import chase
+from repro.core.eg import is_tg_for
+from repro.core.terms import Atom, Program, Rule, Var, parse_atom
+from repro.core.tg_datalog import tgmat
+from repro.core.tg_linear import min_linear, tglinear
+from repro.engine import ops
+from repro.engine.materialize import EngineKB, materialize
+from repro.engine.relation import Relation
+
+X, Y, Z = Var("X"), Var("Y"), Var("Z")
+SETTINGS = dict(deadline=None, max_examples=25,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# random Datalog programs
+# ---------------------------------------------------------------------------
+@st.composite
+def datalog_program(draw):
+    edb = ["e", "f"]
+    idb = ["P", "Q", "R"]
+    n_rules = draw(st.integers(2, 5))
+    rules = []
+    # extensional seeds so IDBs are reachable
+    rules.append(Rule((Atom("e", (X, Y)),), Atom(draw(st.sampled_from(idb)),
+                                                 (X, Y)), "seed"))
+    for i in range(n_rules):
+        n_body = draw(st.integers(1, 2))
+        body = []
+        vars_pool = [X, Y, Z]
+        for _ in range(n_body):
+            p = draw(st.sampled_from(edb + idb))
+            a1 = draw(st.sampled_from(vars_pool))
+            a2 = draw(st.sampled_from(vars_pool))
+            body.append(Atom(p, (a1, a2)))
+        head_vars = [v for a in body for v in a.args]
+        h1 = draw(st.sampled_from(head_vars))
+        h2 = draw(st.sampled_from(head_vars))
+        rules.append(Rule(tuple(body), Atom(draw(st.sampled_from(idb)),
+                                            (h1, h2)), f"g{i}"))
+    return Program(rules)
+
+
+@st.composite
+def base_instance(draw):
+    n = draw(st.integers(1, 8))
+    consts = [f"c{i}" for i in range(draw(st.integers(2, 5)))]
+    facts = set()
+    for _ in range(n):
+        p = draw(st.sampled_from(["e", "f"]))
+        facts.add(Atom(p, (draw(st.sampled_from(consts)),
+                           draw(st.sampled_from(consts)))))
+    return list(facts)
+
+
+@given(datalog_program(), base_instance())
+@settings(**SETTINGS)
+def test_tgmat_equals_chase_random(P, B):
+    ch = chase(P, B, max_rounds=50)
+    if not ch.terminated:
+        return
+    I, _, _ = tgmat(P, B, max_rounds=50)
+    assert set(I.facts) == set(ch.facts)
+
+
+@given(datalog_program(), base_instance())
+@settings(**SETTINGS)
+def test_engine_equals_chase_random(P, B):
+    ch = chase(P, B, max_rounds=50)
+    if not ch.terminated:
+        return
+    kb = EngineKB(P, B)
+    materialize(kb, mode="tg", max_rounds=50)
+    assert kb.decode_facts() == set(ch.facts) | set(B)
+
+
+# ---------------------------------------------------------------------------
+# random linear programs (Datalog fragment => FES)
+# ---------------------------------------------------------------------------
+@st.composite
+def linear_program(draw):
+    idb = ["P", "Q", "R"]
+    rules = [Rule((Atom("e", (X, Y)),),
+                  Atom(draw(st.sampled_from(idb)),
+                       draw(st.sampled_from([(X, Y), (Y, X), (X, X)]))),
+                  "seed")]
+    for i in range(draw(st.integers(1, 4))):
+        src = draw(st.sampled_from(idb))
+        dst = draw(st.sampled_from(idb))
+        b_args = draw(st.sampled_from([(X, Y), (Y, X), (X, X)]))
+        h_args = draw(st.sampled_from([(X, Y), (Y, X), (X, X), (Y, Y)]))
+        used = {t for t in h_args}
+        if not used <= {t for t in b_args}:
+            continue
+        rules.append(Rule((Atom(src, b_args),), Atom(dst, h_args), f"g{i}"))
+    return Program(rules)
+
+
+@given(linear_program(), base_instance())
+@settings(**SETTINGS)
+def test_tglinear_is_tg_random(P, B):
+    B = [f for f in B if f.pred == "e"]
+    if not B:
+        return
+    G = tglinear(P)
+    assert is_tg_for(G, P, B)
+    G2 = min_linear(G)
+    assert is_tg_for(G2, P, B)
+
+
+# ---------------------------------------------------------------------------
+# engine ops invariants
+# ---------------------------------------------------------------------------
+@given(st.lists(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+                min_size=1, max_size=60))
+@settings(**SETTINGS)
+def test_dedup_oracle(rows):
+    r = Relation.from_numpy(np.asarray(rows, np.int32))
+    d = ops.dedup(r)
+    assert d.rows_set() == set(rows)
+    assert d.count == len(set(rows))
+
+
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9)),
+                min_size=1, max_size=40),
+       st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9)),
+                min_size=1, max_size=40))
+@settings(**SETTINGS)
+def test_join_oracle(lrows, rrows):
+    l = Relation.from_numpy(np.asarray(lrows, np.int32))
+    r = Relation.from_numpy(np.asarray(rrows, np.int32))
+    out, m = ops.sm_join(l, r, lkey=1, rkey=0)
+    expect = [(a, b, c, d) for a, b in lrows for c, d in rrows if b == c]
+    assert m == len(expect)
+    assert out.rows_set() == set(expect)
+
+
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9)),
+                min_size=1, max_size=40),
+       st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9)),
+                min_size=1, max_size=40))
+@settings(**SETTINGS)
+def test_antijoin_oracle(rows, hay):
+    r = Relation.from_numpy(np.asarray(rows, np.int32))
+    h = Relation.from_numpy(np.asarray(hay, np.int32))
+    a = ops.antijoin(r, h)
+    assert a.rows_set() == {t for t in rows if t not in set(hay)}

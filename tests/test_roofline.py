@@ -1,0 +1,79 @@
+"""HLO cost analyzer: trip-count awareness and collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_analysis as HA
+from repro.analysis import roofline as RL
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_scan_trip_count_multiplies_flops():
+    n, L = 128, 8
+
+    def scanned(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=L)
+        return h
+
+    def single(x, w):
+        return jnp.tanh(x @ w)
+
+    s = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    t_scan = HA.analyze_text(_compile(scanned, s, s).as_text())
+    t_one = HA.analyze_text(_compile(single, s, s).as_text())
+    ratio = t_scan["flops"] / t_one["flops"]
+    assert 0.9 * L < ratio < 1.1 * L, ratio
+
+
+def test_dot_flops_exact():
+    m, k, n = 64, 32, 16
+
+    def f(a, b):
+        return a @ b
+
+    c = _compile(f, jax.ShapeDtypeStruct((m, k), jnp.float32),
+                 jax.ShapeDtypeStruct((k, n), jnp.float32))
+    t = HA.analyze_text(c.as_text())
+    assert abs(t["flops"] - 2 * m * k * n) / (2 * m * k * n) < 0.05
+
+
+def test_nested_scan_multiplies():
+    def f(x):
+        def outer(h, _):
+            def inner(g, _):
+                return g * 1.5 + 1.0, None
+            g, _ = jax.lax.scan(inner, h, None, length=4)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h
+
+    c = _compile(f, jax.ShapeDtypeStruct((64,), jnp.float32))
+    t = HA.analyze_text(c.as_text())
+    # 12 executions of the elementwise body on 64 lanes (>= 64*12 flops-ish)
+    assert t["flops"] >= 64 * 12
+
+
+def test_roofline_terms():
+    class FakeCost(dict):
+        pass
+    hlo = ""
+    rr = RL.analyze("a", "s", "16x16", 256, {"flops": 1e12}, hlo, 6e15)
+    assert rr.chips == 256
+    assert rr.bottleneck in ("compute", "memory", "collective")
+
+
+def test_collective_parse():
+    txt = """
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  ROOT %ar = f32[16,16]{1,0} all-reduce(%p), replica_groups={}, to_apply=%add
+}
+"""
+    t = HA.analyze_text(txt)
+    assert t["coll"]["all-reduce"] == 2 * 16 * 16 * 4   # 2x ring factor

@@ -1,0 +1,75 @@
+"""Unit tests: terms, parser, normalization, unification, containment."""
+import pytest
+
+from repro.core.terms import (Atom, Null, Program, Rule, Var, example1_program,
+                              parse_atom, parse_program, parse_rule)
+from repro.core.unify import (Index, cq_contained, entails, equivalent,
+                              exists_hom, homomorphisms, instance_hom, mgu)
+
+
+def test_parse_atom():
+    a = parse_atom("r(X, c1)")
+    assert a.pred == "r" and a.args == (Var("X"), "c1")
+
+
+def test_parse_rule_existential():
+    r = parse_rule("r(X, Y) -> exists Z. T(Y, X, Z)")
+    assert r.existentials == [Var("Z")]
+    assert r.frontier == [Var("Y"), Var("X")]
+    assert not r.is_datalog and r.is_linear
+
+
+def test_program_edb_idb():
+    P = example1_program()
+    assert P.edb == {"r"} and P.idb == {"R", "T"}
+    assert P.is_linear and not P.is_datalog
+
+
+def test_normalize_mixed_bodies():
+    P = parse_program("""
+        e(X, Y) -> T(X, Y)
+        T(X, Y) & e(Y, Z) -> T(X, Z)
+    """)
+    Pn = P.normalize()
+    # the mixed body rule must now reference the aux IDB twin of e
+    preds = {a.pred for r in Pn for a in r.body}
+    assert "e~aux" in preds
+    assert all(
+        {a.pred for a in r.body} <= Pn.edb
+        or {a.pred for a in r.body} <= Pn.idb
+        for r in Pn)
+
+
+def test_homomorphisms_basic():
+    facts = [parse_atom("p(a, b)"), parse_atom("p(b, c)")]
+    homs = homomorphisms([parse_atom("p(X, Y)"), parse_atom("p(Y, Z)")], facts)
+    assert len(homs) == 1
+    assert homs[0][Var("X")] == "a" and homs[0][Var("Z")] == "c"
+
+
+def test_instance_hom_nulls():
+    I1 = [Atom("p", ("a", Null(1)))]
+    I2 = [Atom("p", ("a", "b"))]
+    assert entails(I2, I1)          # null maps to b
+    assert not entails(I1, I2)      # constant b cannot map to null
+    assert not equivalent(I1, I2)
+
+
+def test_cq_containment():
+    # Q1(X) <- p(X, Y) & p(Y, X)   ⊆   Q2(X) <- p(X, Y)
+    X, Y = Var("X"), Var("Y")
+    q1 = [Atom("p", (X, Y)), Atom("p", (Y, X))]
+    q2 = [Atom("p", (X, Y))]
+    assert cq_contained([X], q1, [X], q2)
+    assert not cq_contained([X], q2, [X], q1)
+
+
+def test_mgu():
+    X, Y, Z = Var("X"), Var("Y"), Var("Z")
+    th = mgu([Atom("p", (X, "c")), Atom("p", ("d", Y))])
+    assert th[X] == "d" and th[Y] == "c"
+    assert mgu([Atom("p", ("a",)), Atom("p", ("b",))]) is None
+    th2 = mgu([Atom("p", (X, X)), Atom("p", (Y, Z))])
+    # all three variables collapse to one class
+    vals = {th2.get(v, v) for v in (X, Y, Z)}
+    assert len(vals) == 1

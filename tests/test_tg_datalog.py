@@ -1,0 +1,117 @@
+"""TGmat (Alg. 2), minDatalog (Def. 19), Def. 23 strategy, EG-rewriting."""
+import pytest
+
+from repro.core.chase import chase
+from repro.core.eg import EG
+from repro.core.rewrite import eg_rewriting, rewriting_contained
+from repro.core.terms import Atom, Var, parse_atom, parse_program, parse_rule
+from repro.core.tg_datalog import tgmat
+
+
+TC = parse_program("""
+    e(X, Y) -> T(X, Y)
+    T(X, Y) & e(Y, Z) -> T(X, Z)
+""")
+
+
+def _tc_base(n=6, cyc=True):
+    B = [parse_atom(f"e(v{i}, v{i+1})") for i in range(n)]
+    if cyc:
+        B.append(parse_atom(f"e(v{n}, v0)"))
+    return B
+
+
+@pytest.mark.parametrize("use_min,use_ruleexec", [
+    (False, False), (True, False), (True, True)])
+def test_tgmat_equals_chase_tc(use_min, use_ruleexec):
+    B = _tc_base()
+    ch = chase(TC, B)
+    I, eg, st = tgmat(TC, B, use_min=use_min, use_ruleexec=use_ruleexec)
+    assert set(I.facts) == set(ch.facts)
+
+
+def test_tgmat_example22_trigger_reduction():
+    """Def. 23 antijoin: the second rule's instantiations shrink (Ex. 22)."""
+    P = parse_program("""
+        a(X) & b(X) -> A(X)
+        ap(X) & bp(X) -> A(X)
+    """)
+    B = ([parse_atom(f"a(x{i})") for i in range(100)]
+         + [parse_atom(f"b(x{i})") for i in range(100)]
+         + [parse_atom(f"ap(x{i})") for i in range(51)]
+         + [parse_atom(f"bp(x{i})") for i in range(50)])
+    ch = chase(P, B)
+    _, _, no_opt = tgmat(P, B, use_min=False, use_ruleexec=False)
+    _, _, with_r = tgmat(P, B, use_min=True, use_ruleexec=True)
+    assert with_r["triggers"] < no_opt["triggers"] == ch.triggers
+
+
+def test_tgmat_multi_rule_redundancy():
+    """Cross-rule redundant derivations (the SNE blind spot, Example 2)."""
+    P = parse_program("""
+        r(X, Y) -> R(X, Y)
+        R(X, Y) -> S(Y, X)
+        S(Y, X) -> R(X, Y)
+    """)
+    B = [parse_atom(f"r(a{i}, b{i})") for i in range(20)]
+    ch = chase(P, B)
+    I, eg, st = tgmat(P, B)
+    assert set(I.facts) == set(ch.facts)
+    assert st["triggers"] < ch.triggers
+
+
+def test_example44_compatible_combinations():
+    P = parse_program("""
+        a(X) -> A(X)
+        r(X, Y) -> R(X, Y)
+        R(X, Y) & A(Y) -> A(X)
+        R(X, Y) & R(Y, Z) -> A(X)
+    """)
+    B = [parse_atom("a(n2)"), parse_atom("r(n1, n2)"), parse_atom("r(n0, n1)")]
+    ch = chase(P, B)
+    I, eg, st = tgmat(P, B)
+    assert set(I.facts) == set(ch.facts)
+
+
+def test_eg_rewriting_example43():
+    """Example 43: rew(u2) == Q(Y2,Z2) <- r(Y2, Z2, Z1)."""
+    P = parse_program("""
+        r(X1, Y1, Z1) -> T(X1, X1, Y1)
+        T(X2, Y2, Z2) -> R(Y2, Z2)
+    """)
+    eg = EG(P)
+    u1 = eg.add_node(P.rules[0])
+    u2 = eg.add_node(P.rules[1])
+    eg.add_edge(u1, 0, u2)
+    q = eg_rewriting(eg, u2)
+    assert len(q.body) == 1
+    (b,) = q.body
+    assert b.pred == "r"
+    # head args equal the first two args of the body atom
+    assert q.head_args == (b.args[0], b.args[1])
+
+
+def test_rewriting_containment_same_node():
+    eg = EG(TC.normalize())
+    ext = [r for r in TC.normalize().extensional_rules()]
+    v1 = eg.add_node(ext[0])
+    v2 = eg.add_node(ext[0])
+    q1, q2 = eg_rewriting(eg, v1), eg_rewriting(eg, v2)
+    assert rewriting_contained(q1, q2) and rewriting_contained(q2, q1)
+
+
+def test_min_datalog_prunes_duplicate_paths():
+    """Two rules deriving the same predicate from the same EDB — one node
+    per level suffices after minDatalog."""
+    P = parse_program("""
+        e(X, Y) -> A(X, Y)
+        e(X, Y) -> B(X, Y)
+        A(X, Y) -> C(X, Y)
+        B(X, Y) -> C(X, Y)
+    """)
+    B = [parse_atom("e(u, v)")]
+    ch = chase(P, B)
+    I, eg, st_min = tgmat(P, B, use_min=True)
+    I2, eg2, st_nomin = tgmat(P, B, use_min=False)
+    assert set(I.facts) == set(I2.facts) == set(ch.facts)
+    assert st_min["triggers"] <= st_nomin["triggers"]

@@ -1,0 +1,87 @@
+"""tglinear (Alg. 1) + minLinear (Defs. 12-14) — paper Examples 1/16/41/42."""
+import pytest
+
+from repro.core.chase import chase
+from repro.core.eg import evaluate, is_tg_for
+from repro.core.terms import example1_program, parse_atom, parse_program
+from repro.core.tg_linear import canonical_facts, min_linear, tglinear
+from repro.core.unify import entails
+
+
+def test_canonical_facts_bell():
+    P = example1_program()
+    H = canonical_facts(P)   # r/2: Bell(2) = 2 patterns
+    assert len(H) == 2
+    pats = {tuple(a == b for a in f.args for b in f.args) for f in H}
+    assert len(pats) == 2
+
+
+def test_example1_tglinear_structure():
+    """Figure 1(b): nodes for r1, r4, r2 with r1 -> r2 edge."""
+    P = example1_program()
+    G = tglinear(P)
+    rules = sorted(G.rule_of[v].name for v in G.nodes)
+    assert rules == ["r1", "r2", "r4"]
+    r2_node = [v for v in G.nodes if G.rule_of[v].name == "r2"][0]
+    r1_node = [v for v in G.nodes if G.rule_of[v].name == "r1"][0]
+    assert G.parents(r2_node) == {0: r1_node}
+
+
+def test_example1_minlinear_removes_r4():
+    """Figure 1(c): u2 (the r4 node) is dominated by u3 and removed."""
+    P = example1_program()
+    G = min_linear(tglinear(P))
+    rules = sorted(G.rule_of[v].name for v in G.nodes)
+    assert rules == ["r1", "r2"]
+
+
+@pytest.mark.parametrize("base", [
+    ["r(c1, c2)"],
+    ["r(c1, c1)"],
+    ["r(a, b)", "r(b, c)", "r(c, c)"],
+])
+def test_tg_property_preserved(base):
+    P = example1_program()
+    B = [parse_atom(s) for s in base]
+    G = tglinear(P)
+    assert is_tg_for(G, P, B)
+    G2 = min_linear(G)
+    assert is_tg_for(G2, P, B)
+
+
+def test_example41_evaluation():
+    """Example 41: node instances when reasoning over G1."""
+    P = example1_program()
+    G = tglinear(P)
+    ev = evaluate(G, [parse_atom("r(c1, c2)")])
+    by_rule = {G.rule_of[v].name: ev.node_facts[v] for v in G.nodes}
+    assert {str(f) for f in by_rule["r1"]} == {"R(c1, c2)"}
+    assert {str(f) for f in by_rule["r2"]} == {"T(c2, c1, c2)"}
+    assert len(by_rule["r4"]) == 1
+    (f,) = by_rule["r4"]
+    assert f.pred == "T" and f.args[0] == "c2" and f.args[1] == "c1"
+
+
+def test_linear_chain_program():
+    P = parse_program("""
+        a(X) -> B(X)
+        B(X) -> C(X)
+        C(X) -> D(X)
+    """)
+    G = min_linear(tglinear(P))
+    assert G.stats()["nodes"] == 3 and G.stats()["depth"] == 2
+    B = [parse_atom("a(u)"), parse_atom("a(v)")]
+    assert is_tg_for(G, P, B)
+
+
+def test_cyclic_linear_program_blocked():
+    """r2/r3-style cycles must not yield infinite TGs (Example 2)."""
+    P = parse_program("""
+        r(X, Y) -> R(X, Y)
+        R(X, Y) -> S(Y, X)
+        S(Y, X) -> R(X, Y)
+    """)
+    G = tglinear(P)
+    # the cycle closes after deriving R and S once: at most 3 nodes
+    assert G.stats()["nodes"] <= 3
+    assert is_tg_for(G, P, [parse_atom("r(c1, c2)")])
