@@ -7,8 +7,8 @@ from repro.data.kb_sources import CHASEBENCH, chasebench_facts
 from repro.engine.materialize import EngineKB, materialize
 
 
-def run():
-    B = chasebench_facts(n=400)
+def run(smoke: bool = False):
+    B = chasebench_facts(n=60 if smoke else 400)
     warmup(CHASEBENCH, chasebench_facts(n=60), modes=("seminaive", "tg"), max_rounds=40)
     for mode in ("seminaive", "tg"):
         kb = EngineKB(CHASEBENCH, B)

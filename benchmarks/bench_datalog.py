@@ -1,18 +1,75 @@
-"""Paper Table 3 analogue — Datalog scenarios (LUBM-L / LUBM-LE).
+"""Paper Table 3 analogue — Datalog scenarios (LUBM-L / LUBM-LE) plus a
+transitive-closure instance that isolates the sorted-store engine win.
 
-Columns: chase baseline (seminaive/VLog-like per-rule filtering), TG-guided
-without optimizations (round-level filtering only), and TG-guided m+r
-(Def. 23 antijoin restriction)."""
+LUBM columns: chase baseline (seminaive/VLog-like per-rule filtering),
+TG-guided without optimizations (round-level filtering only), and TG-guided
+m+r (Def. 23 antijoin restriction).
+
+The TC rows run the same instance twice — with the sortedness invariant
+honored (``REPRO_SORTED_STORE=1``, the default: antijoin probes the sorted
+store, unions are incremental merges) and with it disabled (seed behavior:
+every antijoin/dedup re-lexsorts) — and report the engine sort-pass counts
+(``sorts``/``skipped``/``merges``) alongside wall time."""
 from __future__ import annotations
 
+import os
+
 from benchmarks.common import emit, peak_rss_mb, timed, warmup
+from repro.core.terms import parse_atom, parse_program
 from repro.data.kb_sources import LUBM_L, LUBM_LE, lubm_facts
+from repro.engine import ops
 from repro.engine.materialize import EngineKB, materialize
 
+# TC with the closure relation laid out as T(to, from): the recursive join is
+# then on column 0 of BOTH the delta and the edge store — i.e. on their
+# primary sort column — so the sorted-store engine runs the whole fixpoint
+# without re-sorting either join input (the index-orientation choice a
+# sorted store rewards; the resort baseline re-sorts both sides every round).
+TC = parse_program("""
+    e(X, Y) -> T(Y, X)
+    T(Y, X) & e(Y, Z) -> T(Z, X)
+""")
 
-def run():
-    for name, P in (("LUBM-L", LUBM_L), ("LUBM-LE", LUBM_LE)):
-        B = lubm_facts(n_univ=4)
+
+def tc_facts(n_chain: int = 96, n_extra: int = 64, seed: int = 0):
+    """A long path (deep fixpoint, many rounds) plus random chords."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    edges = [(i, i + 1) for i in range(n_chain)]
+    edges += [tuple(e) for e in rng.integers(0, n_chain, (n_extra, 2))]
+    return [parse_atom(f"e(v{a}, v{b})") for a, b in edges]
+
+
+def run_tc(smoke: bool = False):
+    B = tc_facts(n_chain=24 if smoke else 96, n_extra=16 if smoke else 64)
+    prev = os.environ.get("REPRO_SORTED_STORE")
+    try:
+        for flag, tag in (("1", "sorted_store"), ("0", "resort_baseline")):
+            os.environ["REPRO_SORTED_STORE"] = flag
+            # warm the jit caches on the SAME instance (capacity-bucketed
+            # kernels compile per bucket; timing measures steady state)
+            warmup(TC, B, modes=("tg",))
+            ops.SORT_STATS.reset()
+            kb = EngineKB(TC, B)
+            st, t = timed(materialize, kb, mode="tg")
+            emit(f"datalog.TC.tg_{tag}", t, st.derived,
+                 triggers=st.triggers, rounds=st.rounds,
+                 sorts=ops.SORT_STATS.total_sorts(),
+                 skipped=ops.SORT_STATS.skipped,
+                 merges=ops.SORT_STATS.merges)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_SORTED_STORE", None)
+        else:
+            os.environ["REPRO_SORTED_STORE"] = prev
+
+
+def run(smoke: bool = False):
+    n_univ = 1 if smoke else 4
+    scenarios = (("LUBM-L", LUBM_L),) if smoke else (("LUBM-L", LUBM_L),
+                                                     ("LUBM-LE", LUBM_LE))
+    for name, P in scenarios:
+        B = lubm_facts(n_univ=n_univ)
         warmup(P, lubm_facts(n_univ=1))
         kb = EngineKB(P, B)
         st, t = timed(materialize, kb, mode="seminaive")
@@ -30,6 +87,8 @@ def run():
         st, t = timed(materialize, kb, mode="tg")
         emit(f"datalog.{name}.tg_m_r", t, st.derived, triggers=st.triggers,
              rounds=st.rounds, mem_mb=f"{peak_rss_mb():.0f}")
+
+    run_tc(smoke)
 
 
 if __name__ == "__main__":

@@ -13,13 +13,14 @@ from repro.data.kb_sources import LUBM_LI, linear_subset, lubm_facts, \
 from repro.engine.materialize import EngineKB, materialize
 
 
-def scenarios():
-    yield "LUBM-LI", LUBM_LI, lubm_facts(n_univ=4)
-    yield "RHODF-LI", linear_subset(RHO_DF), rho_df_facts()
+def scenarios(smoke: bool = False):
+    yield "LUBM-LI", LUBM_LI, lubm_facts(n_univ=1 if smoke else 4)
+    if not smoke:
+        yield "RHODF-LI", linear_subset(RHO_DF), rho_df_facts()
 
 
-def run():
-    for name, P, B in scenarios():
+def run(smoke: bool = False):
+    for name, P, B in scenarios(smoke):
         warmup(P, B[:len(B)//8] or B, modes=("seminaive",))
         # baseline: chase engine (SNE)
         kb = EngineKB(P, B)

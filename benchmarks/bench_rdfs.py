@@ -7,8 +7,11 @@ from repro.data.kb_sources import RHO_DF, rho_df_facts
 from repro.engine.materialize import EngineKB, materialize
 
 
-def run():
-    B = rho_df_facts(n_classes=60, n_props=20, n_instances=1500)
+def run(smoke: bool = False):
+    if smoke:
+        B = rho_df_facts(n_classes=12, n_props=6, n_instances=120)
+    else:
+        B = rho_df_facts(n_classes=60, n_props=20, n_instances=1500)
     warmup(RHO_DF, rho_df_facts(n_instances=150))
     for mode in ("seminaive", "tg_noopt", "tg"):
         kb = EngineKB(RHO_DF, B)

@@ -11,9 +11,11 @@ from repro.data.kb_sources import LUBM_L, lubm_facts
 from repro.engine.materialize import EngineKB, materialize
 
 
-def run():
+def run(smoke: bool = False):
     scales = (1, 2, 4, 8)
-    if os.environ.get("BENCH_LARGE"):
+    if smoke:
+        scales = (1, 2)
+    elif os.environ.get("BENCH_LARGE"):
         scales = (1, 2, 4, 8, 16, 32)
     warmup(LUBM_L, lubm_facts(n_univ=1), modes=("tg",))
     for n_univ in scales:

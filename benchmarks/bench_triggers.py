@@ -11,11 +11,11 @@ from repro.data.kb_sources import (LUBM_L, LUBM_LE, RHO_DF, lubm_facts,
 from repro.engine.materialize import EngineKB, materialize
 
 
-def run():
+def run(smoke: bool = False):
     scenarios = [
-        ("LUBM-L", LUBM_L, lubm_facts(n_univ=3)),
-        ("LUBM-LE", LUBM_LE, lubm_facts(n_univ=2)),
-        ("RHODF", RHO_DF, rho_df_facts(n_instances=400)),
+        ("LUBM-L", LUBM_L, lubm_facts(n_univ=1 if smoke else 3)),
+        ("LUBM-LE", LUBM_LE, lubm_facts(n_univ=1 if smoke else 2)),
+        ("RHODF", RHO_DF, rho_df_facts(n_instances=60 if smoke else 400)),
     ]
     for name, P, B in scenarios:
         row = {}

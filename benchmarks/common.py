@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: timing, memory, CSV emit."""
+"""Shared benchmark utilities: timing, memory, CSV emit + JSON recording."""
 from __future__ import annotations
 
 import os
@@ -7,6 +7,14 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# every emit() row also lands here so drivers (benchmarks/run.py --smoke)
+# can dump machine-readable BENCH_*.json files
+RESULTS: list[dict] = []
+
+
+def reset_results() -> None:
+    RESULTS.clear()
 
 
 def peak_rss_mb() -> float:
@@ -24,6 +32,8 @@ def emit(name: str, seconds: float, derived: int, **extra):
     cols = [name, f"{seconds * 1e6:.0f}", str(derived)]
     cols += [f"{k}={v}" for k, v in extra.items()]
     print(",".join(cols), flush=True)
+    RESULTS.append({"name": name, "us_per_call": round(seconds * 1e6),
+                    "derived": derived, **extra})
 
 
 def warmup(program, base, modes=("seminaive", "tg_noopt", "tg"), **kw):

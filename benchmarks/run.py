@@ -3,13 +3,23 @@
 Prints ``name,us_per_call,derived[,k=v...]`` CSV rows.  Each module warms the
 jit caches with a small instance before timing (capacity-bucketed kernels are
 compile-once-per-bucket).
+
+``--smoke`` runs every table on tiny instances (seconds, not minutes) and
+writes the rows to ``BENCH_smoke.json`` — the machine-readable perf
+trajectory CI uploads as an artifact on every push.  ``--out FILE`` overrides
+the JSON path (also usable without ``--smoke`` for full runs).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
 import sys
 
 from benchmarks import (bench_chasebench, bench_datalog, bench_linear,
                         bench_rdfs, bench_scalability, bench_triggers)
+from benchmarks import common
 
 TABLES = {
     "linear": bench_linear.run,          # paper Table 2
@@ -22,10 +32,35 @@ TABLES = {
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(TABLES)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("tables", nargs="*", choices=[[], *TABLES],
+                    help="subset of tables (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny instances; write BENCH_smoke.json")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default BENCH_smoke.json "
+                         "with --smoke, none otherwise)")
+    args = ap.parse_args()
+
+    which = args.tables or list(TABLES)
+    common.reset_results()
     print("name,us_per_call,derived,extra...")
     for name in which:
-        TABLES[name]()
+        TABLES[name](smoke=args.smoke)
+
+    out = args.out or ("BENCH_smoke.json" if args.smoke else None)
+    if out:
+        payload = {
+            "mode": "smoke" if args.smoke else "full",
+            "tables": which,
+            "python": platform.python_version(),
+            "use_pallas": os.environ.get("REPRO_USE_PALLAS", "0"),
+            "results": common.RESULTS,
+        }
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[bench] wrote {len(common.RESULTS)} rows to {out}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -12,18 +12,16 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
-import jax
-from jax.sharding import AxisType
 
 from repro.engine.distributed import DistConfig, run_distributed_tc
+from repro.launch.mesh import compat_make_mesh
 
 
 def main():
     rng = np.random.default_rng(0)
     edges = np.unique(rng.integers(0, 300, (2000, 2)).astype(np.int32),
                       axis=0)
-    mesh = jax.make_mesh((8, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((8, 1), ("data", "model"))
     cfg = DistConfig(shard_cap=1 << 15, delta_cap=1 << 13, bucket_cap=1 << 11)
     print(f"[dist] {len(edges)} edges over {mesh.shape['data']} shards")
     t_store, count, triggers, rounds = run_distributed_tc(edges, mesh, cfg)

@@ -11,13 +11,11 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-from jax.sharding import AxisType
-
 from repro.configs.base import ModelConfig
 from repro.data.kb_sources import LUBM_L, lubm_facts
 from repro.data.pipeline import KBLinearizer
 from repro.engine.materialize import EngineKB, materialize
+from repro.launch.mesh import compat_make_mesh
 from repro.models import model as M
 from repro.models.layers import MeshCtx
 from repro.train.train_loop import train
@@ -55,8 +53,7 @@ def main():
     cfg = lm_100m(data.vocab_size).with_(num_layers=args.layers)
     n = cfg.param_counts()["total"]
     print(f"[model] {n/1e6:.1f}M params")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     mcx = MeshCtx(mesh=mesh, dp=("data",), tp="model")
     mdl = M.build(cfg, mcx)
     ckpt = args.ckpt or os.path.join(tempfile.gettempdir(), "kb_lm_ckpt")

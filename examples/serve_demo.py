@@ -11,17 +11,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.configs.base import get_smoke_config
+from repro.launch.mesh import compat_make_mesh
 from repro.models import model as M
 from repro.models.layers import MeshCtx
 
 
 def main():
     cfg = get_smoke_config("stablelm_12b").with_(dtype="float32")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     mcx = MeshCtx(mesh=mesh, dp=("data",), tp="model")
     mdl = M.build(cfg, mcx)
     params = mdl.init_params(jax.random.PRNGKey(0))

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.engine.relation import PAD
 
 
@@ -249,7 +250,7 @@ def run_distributed_tc(edges: np.ndarray, mesh, cfg: DistConfig = DistConfig()):
         e_sharded = place(edges, tgt_src)
         t_sharded = place(edges, tgt_tuple)
         body = distributed_tc_step(cfg, ndev)
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(shard_map(
             body, mesh=mesh,
             in_specs=(P(cfg.axis, None), P(cfg.axis, None)),
             out_specs=(P(cfg.axis, None), P(), P(), P(), P())))
@@ -269,7 +270,7 @@ def lower_distributed_tc(mesh, cfg: DistConfig = DistConfig()):
     """Dry-run entry: lower+compile the distributed loop on a target mesh."""
     ndev = _axis_size(mesh, cfg.axis)
     body = distributed_tc_step(cfg, ndev)
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P(cfg.axis, None), P(cfg.axis, None)),
         out_specs=(P(cfg.axis, None), P(), P(), P(), P())))

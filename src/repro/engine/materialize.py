@@ -46,8 +46,14 @@ class EngineKB:
         self.rels: Dict[str, Relation] = {}
         for p, ar in self.arities.items():
             if p in rows:
-                self.rels[p] = Relation.from_numpy(
+                rel = Relation.from_numpy(
                     np.asarray(rows[p], np.int32).reshape(len(rows[p]), ar))
+                # store invariant: every store relation is lexsorted (and
+                # set-semantic), so per-round dedup/antijoin skip their sort
+                # pass and unions become incremental merges
+                if ops.sorted_store_enabled():
+                    rel = ops.dedup(rel)
+                self.rels[p] = rel
             else:
                 self.rels[p] = Relation.empty(max(ar, 1))
 
@@ -194,17 +200,31 @@ def materialize(kb: EngineKB, mode: str = "tg", max_rounds: int = 10_000,
     deltas: Dict[str, Relation] = {}
 
     def absorb(pred, rel, collector):
-        """Dedup + antijoin vs store, append, record delta."""
+        """Dedup + antijoin vs store, merge-append, record delta.
+
+        With the sorted store the delta comes out of ``dedup`` lexsorted, the
+        antijoin probes the already-sorted store (no sort pass), and the
+        surviving rows — disjoint from the store by construction — are folded
+        in with an incremental merge instead of concat + resort."""
         if rel is None or rel.count == 0:
             return
         rel = ops.dedup(rel)
         fresh = ops.antijoin(rel, kb.rels[pred])
         if fresh.count == 0:
             return
-        kb.rels[pred] = ops.union(kb.rels[pred], fresh, dedupe=False)
+        if ops.sorted_store_enabled():
+            kb.rels[pred] = ops.merge_union(kb.rels[pred], fresh)
+        else:
+            kb.rels[pred] = ops.union(kb.rels[pred], fresh, dedupe=False)
         st.derived += fresh.count
         if pred in collector:
-            collector[pred] = ops.union(collector[pred], fresh, dedupe=True)
+            # prior deltas for pred are already in the store, so ``fresh`` is
+            # disjoint from them too and the merge path applies
+            if ops.sorted_store_enabled():
+                collector[pred] = ops.merge_union(collector[pred], fresh)
+            else:
+                collector[pred] = ops.union(collector[pred], fresh,
+                                            dedupe=True)
         else:
             collector[pred] = fresh
 
@@ -287,5 +307,8 @@ def _materialize_tg_linear(kb: EngineKB, eg, cleaning: bool) -> MatStats:
             acc = ops.dedup(acc)
             acc = ops.antijoin(acc, kb.rels[pred])
         st.derived += acc.count
-        kb.rels[pred] = ops.union(kb.rels[pred], acc, dedupe=not cleaning)
+        if cleaning and ops.sorted_store_enabled():
+            kb.rels[pred] = ops.merge_union(kb.rels[pred], acc)
+        else:
+            kb.rels[pred] = ops.union(kb.rels[pred], acc, dedupe=not cleaning)
     return st

@@ -1,22 +1,83 @@
-"""Vectorized relational operators on padded int32 relations (pure jnp).
+"""Vectorized relational operators on padded int32 relations.
 
 All functions are shape-stable and jit-cached per capacity bucket.  Data-
 dependent sizes follow the two-phase pattern: a jitted *count* pass, a host
 pow-2 bucket choice, then a jitted *materialize* pass.
 
-The sort/dedup/probe inner loops have Pallas TPU kernels in
-``repro.kernels`` (used when ``repro.kernels.ops.USE_PALLAS`` is on); these
-jnp versions are the reference implementations and the CPU path.
+Sortedness invariant
+--------------------
+Operators honor the ``Relation.sorted_by`` marker: ``dedup``/``antijoin``/
+``sm_join`` skip their sort pass when an input already carries the needed
+order, and ``merge_union`` folds a small sorted delta into a sorted store
+with two lexicographic binary-search passes instead of a concat-and-resort
+(O((m+n)·ar·log) vs O((m+n)·log(m+n)) full sort work per call — and, more
+importantly, no re-sorting of the already-sorted store).  ``SORT_STATS``
+counts performed vs skipped sort passes; ``REPRO_SORTED_STORE=0`` disables
+the fast paths for A/B benchmarking.
+
+Kernel dispatch
+---------------
+Setting ``REPRO_USE_PALLAS=1`` routes the sort / unique-mask / membership-
+probe inner loops through the Pallas kernels in ``repro.kernels.ops``
+(``sort_with_payload``, ``unique_mask``, ``probe_sorted``; interpret mode on
+CPU, compiled on TPU).  The jnp implementations here are the reference path
+and the default.  Multi-column lexsorts and the merge-union binary searches
+stay on the jnp path in both modes (the kernels are single-key).
 """
 from __future__ import annotations
 
-from functools import lru_cache, partial
+import os
+from dataclasses import dataclass
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.relation import PAD, Relation, next_pow2
+from repro.engine.relation import PAD, Relation, lex_order, next_pow2
+
+
+# ---------------------------------------------------------------------------
+# dispatch switches + sort-pass accounting
+# ---------------------------------------------------------------------------
+def use_pallas() -> bool:
+    """Route sort/unique/probe inner loops through the Pallas kernels."""
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def sorted_store_enabled() -> bool:
+    """Honor ``sorted_by`` markers (skip redundant sorts, merge unions)."""
+    return os.environ.get("REPRO_SORTED_STORE", "1") != "0"
+
+
+_KERNELS = None
+
+
+def _kernels():
+    global _KERNELS
+    if _KERNELS is None:
+        from repro.kernels import ops as _ko
+        _KERNELS = _ko
+    return _KERNELS
+
+
+@dataclass
+class SortStats:
+    """Counts of sort passes performed / avoided (the paper's redundant-work
+    argument, applied to the engine's own hot path)."""
+    lexsort: int = 0       # full row lexsorts executed
+    key_sort: int = 0      # single-key sorts executed (sm_join inputs)
+    merges: int = 0        # incremental merge-unions executed
+    skipped: int = 0       # sort passes avoided via a sorted_by marker
+
+    def reset(self):
+        self.lexsort = self.key_sort = self.merges = self.skipped = 0
+
+    def total_sorts(self) -> int:
+        return self.lexsort + self.key_sort
+
+
+SORT_STATS = SortStats()
 
 
 # ---------------------------------------------------------------------------
@@ -32,8 +93,35 @@ def _lexsort_fn(cap, ar):
     return f
 
 
+@lru_cache(maxsize=None)
+def _keysort_pallas_fn(cap, ar, key_col):
+    K = _kernels()
+    tile = min(1024, cap)
+
+    @jax.jit
+    def f(data):
+        keys = data[:, key_col]
+        vals = jnp.arange(cap, dtype=jnp.int32)
+        _, perm = K.sort_with_payload(keys, vals, tile=tile)
+        return data[perm]
+    return f
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
 def lexsort_rows(rel: Relation) -> Relation:
-    return Relation(_lexsort_fn(rel.capacity, rel.arity)(rel.data), rel.count)
+    order = lex_order(rel.arity)
+    if sorted_store_enabled() and rel.sorted_by == order:
+        SORT_STATS.skipped += 1
+        return rel
+    if use_pallas() and rel.arity == 1 and _is_pow2(rel.capacity):
+        data = _keysort_pallas_fn(rel.capacity, 1, 0)(rel.data)
+    else:
+        data = _lexsort_fn(rel.capacity, rel.arity)(rel.data)
+    SORT_STATS.lexsort += 1
+    return Relation(data, rel.count, order)
 
 
 @lru_cache(maxsize=None)
@@ -45,6 +133,17 @@ def _dedup_count_fn(cap, ar):
         neq = neq.at[0].set(True)
         valid = sorted_data[:, 0] != PAD
         return jnp.sum(jnp.logical_and(neq, valid)), jnp.logical_and(neq, valid)
+    return f
+
+
+@lru_cache(maxsize=None)
+def _dedup_count_pallas_fn(cap, ar):
+    K = _kernels()
+
+    @jax.jit
+    def f(sorted_data):
+        mask = K.unique_mask(sorted_data).astype(bool)
+        return jnp.sum(mask), mask
     return f
 
 
@@ -61,15 +160,19 @@ def _compact_fn(cap, ar, out_cap):
 
 
 def dedup(rel: Relation) -> Relation:
-    """Sort + adjacent-unique + compact."""
+    """Sort (skipped on a lexsorted input) + adjacent-unique + compact.
+    Output is lexsorted and marked."""
     if rel.count == 0:
         return Relation.empty(rel.arity)
     s = lexsort_rows(rel)
-    n, mask = _dedup_count_fn(rel.capacity, rel.arity)(s.data)
+    if use_pallas():
+        n, mask = _dedup_count_pallas_fn(s.capacity, s.arity)(s.data)
+    else:
+        n, mask = _dedup_count_fn(s.capacity, s.arity)(s.data)
     n = int(n)
     cap = next_pow2(n)
-    out = _compact_fn(rel.capacity, rel.arity, cap)(s.data, mask)
-    return Relation(out, n)
+    out = _compact_fn(s.capacity, s.arity, cap)(s.data, mask)
+    return Relation(out, n, lex_order(rel.arity))
 
 
 # ---------------------------------------------------------------------------
@@ -89,7 +192,8 @@ def _filter_count_fn(cap, ar, eq_pairs, const_pairs):
 
 
 def filter_rows(rel: Relation, eq_pairs=(), const_pairs=()) -> Relation:
-    """Select rows with col equality (repeated vars) / constant constraints."""
+    """Select rows with col equality (repeated vars) / constant constraints.
+    Compaction keeps row order, so the sortedness marker is preserved."""
     if rel.count == 0 or (not eq_pairs and not const_pairs):
         return rel
     n, mask = _filter_count_fn(rel.capacity, rel.arity, tuple(eq_pairs),
@@ -97,7 +201,7 @@ def filter_rows(rel: Relation, eq_pairs=(), const_pairs=()) -> Relation:
     n = int(n)
     cap = next_pow2(n)
     out = _compact_fn(rel.capacity, rel.arity, cap)(rel.data, mask)
-    return Relation(out, n)
+    return Relation(out, n, rel.sorted_by)
 
 
 @lru_cache(maxsize=None)
@@ -131,8 +235,18 @@ def _sortby_fn(cap, ar, key_col):
 
 
 def sort_by(rel: Relation, key_col: int) -> Relation:
-    return Relation(_sortby_fn(rel.capacity, rel.arity, key_col)(rel.data),
-                    rel.count)
+    """Sort by one key column; skipped when ``sorted_by`` already starts with
+    that column (a lexsorted relation is sorted by its primary column)."""
+    if (sorted_store_enabled() and rel.sorted_by
+            and rel.sorted_by[0] == key_col):
+        SORT_STATS.skipped += 1
+        return rel
+    if use_pallas() and _is_pow2(rel.capacity):
+        data = _keysort_pallas_fn(rel.capacity, rel.arity, key_col)(rel.data)
+    else:
+        data = _sortby_fn(rel.capacity, rel.arity, key_col)(rel.data)
+    SORT_STATS.key_sort += 1
+    return Relation(data, rel.count, (key_col,))
 
 
 @lru_cache(maxsize=None)
@@ -170,7 +284,8 @@ def _join_mat_fn(lcap, lar, rcap, rar, out_cap):
 
 def sm_join(l: Relation, r: Relation, lkey: int, rkey: int):
     """Sort-merge join; returns (Relation out, matches) where out columns are
-    [l cols..., r cols...] and ``matches`` is the trigger count."""
+    [l cols..., r cols...] and ``matches`` is the trigger count.  Input sorts
+    are skipped for relations already sorted by their join key."""
     if l.count == 0 or r.count == 0:
         return Relation.empty(l.arity + r.arity), 0
     ls = sort_by(l, lkey)
@@ -201,6 +316,45 @@ def cross(l: Relation, r: Relation):
 
 
 # ---------------------------------------------------------------------------
+# lexicographic binary search (shared by antijoin + merge_union)
+# ---------------------------------------------------------------------------
+def _range_narrow(col, key, lo, hi):
+    """Per-row binary search narrowing [lo,hi) to col==key (col sorted within
+    each [lo,hi) range by lexsort invariant).  The step loop is a
+    ``fori_loop`` so the traced graph stays small — these searches are built
+    per capacity bucket and an unrolled log2(n) body made recompilation the
+    dominant cost as the store grows through buckets."""
+    n = col.shape[0]
+    steps = max(1, int(np.ceil(np.log2(n + 1))))
+
+    def bs(le):
+        def body(_, lh):
+            l, h = lh
+            mid = (l + h) // 2
+            v = col[jnp.clip(mid, 0, n - 1)]
+            go_right = jnp.where(le, v <= key, v < key)
+            in_range = mid < h
+            l = jnp.where(jnp.logical_and(in_range, go_right), mid + 1, l)
+            h = jnp.where(jnp.logical_and(in_range,
+                                          jnp.logical_not(go_right)), mid, h)
+            return l, h
+        return jax.lax.fori_loop(0, steps, body, (lo, hi))[0]
+
+    return bs(False), bs(True)
+
+
+def _lex_searchsorted_left(hay, probe):
+    """Leftmost insertion positions of each ``probe`` row in lexsorted
+    ``hay``: per-column range narrowing; when a column value is absent the
+    range collapses to the insertion point and stays there."""
+    lo = jnp.zeros(probe.shape[0], jnp.int32)
+    hi = jnp.full(probe.shape[0], hay.shape[0], jnp.int32)
+    for c in range(hay.shape[1]):
+        lo, hi = _range_narrow(hay[:, c], probe[:, c], lo, hi)
+    return lo
+
+
+# ---------------------------------------------------------------------------
 # antijoin (Def. 23 / redundancy filtering): drop rows whose key-tuple occurs
 # in a sorted haystack relation
 # ---------------------------------------------------------------------------
@@ -208,23 +362,11 @@ def cross(l: Relation, r: Relation):
 def _anti_count_fn(cap, ar, hcap, har, cols):
     @jax.jit
     def f(data, hay_sorted):
-        # compare on all haystack columns: hay is the full (har)-tuple set;
-        # probe tuple built from data[:, cols]
         probe = data[:, jnp.array(cols, jnp.int32)]
-        # lexicographic binary search via packed comparison per column chain:
-        # search on first col, then verify with scan over candidates is not
-        # shape-stable; instead: since haystack rows are lexsorted, use
-        # searchsorted over a fused comparison by iterating columns.
-        n = hay_sorted.shape[0]
         lo = jnp.zeros(probe.shape[0], jnp.int32)
-        hi = jnp.full(probe.shape[0], n, jnp.int32)
+        hi = jnp.full(probe.shape[0], hay_sorted.shape[0], jnp.int32)
         for c in range(har):
-            col = hay_sorted[:, c]
-            key = probe[:, c]
-            # narrow [lo, hi) to rows where col == key using vectorized
-            # searchsorted on the global sorted column is invalid; use
-            # per-row binary search instead
-            lo, hi = _range_narrow(col, key, lo, hi)
+            lo, hi = _range_narrow(hay_sorted[:, c], probe[:, c], lo, hi)
         found = hi > lo
         valid = data[:, 0] != PAD
         keep = jnp.logical_and(valid, jnp.logical_not(found))
@@ -232,30 +374,25 @@ def _anti_count_fn(cap, ar, hcap, har, cols):
     return f
 
 
-def _range_narrow(col, key, lo, hi):
-    """Per-row binary search narrowing [lo,hi) to col==key (col sorted within
-    each [lo,hi) range by lexsort invariant)."""
-    n = col.shape[0]
-    steps = max(1, int(np.ceil(np.log2(n + 1))))
+@lru_cache(maxsize=None)
+def _anti_count_pallas_fn(cap, ar, hcap, col):
+    """Single-key-column probe through the Pallas binary-search kernel."""
+    K = _kernels()
 
-    def bs(side):
-        l, h = lo, hi
-        for _ in range(steps):
-            mid = (l + h) // 2
-            v = col[jnp.clip(mid, 0, n - 1)]
-            go_right = jnp.where(side == 0, v < key, v <= key)
-            l = jnp.where(jnp.logical_and(mid < h, go_right), mid + 1, l)
-            h = jnp.where(jnp.logical_and(mid < h, jnp.logical_not(go_right)),
-                          mid, h)
-        return l
-
-    new_lo = bs(jnp.array(0))
-    new_hi = bs(jnp.array(1))
-    return new_lo, new_hi
+    @jax.jit
+    def f(data, hay_sorted):
+        found = K.probe_sorted(data[:, col], hay_sorted[:, 0])
+        valid = data[:, 0] != PAD
+        keep = jnp.logical_and(valid, found == 0)
+        return jnp.sum(keep), keep
+    return f
 
 
 def antijoin(rel: Relation, hay: Relation, cols=None) -> Relation:
-    """Rows of rel whose ``cols``-tuple is NOT in hay (hay lexsorted)."""
+    """Rows of rel whose ``cols``-tuple is NOT in hay.  The haystack lexsort
+    is skipped when ``hay`` carries the full-lexsort marker (the store
+    invariant); the output keeps ``rel``'s marker since compaction preserves
+    row order."""
     if rel.count == 0:
         return rel
     if hay.count == 0:
@@ -263,20 +400,27 @@ def antijoin(rel: Relation, hay: Relation, cols=None) -> Relation:
     cols = tuple(cols) if cols is not None else tuple(range(rel.arity))
     assert len(cols) == hay.arity
     hs = lexsort_rows(hay)
-    n, keep = _anti_count_fn(rel.capacity, rel.arity, hay.capacity, hay.arity,
-                             cols)(rel.data, hs.data)
+    if (use_pallas() and hay.arity == 1 and _is_pow2(rel.capacity)
+            and _is_pow2(hs.capacity)):
+        n, keep = _anti_count_pallas_fn(rel.capacity, rel.arity, hs.capacity,
+                                        cols[0])(rel.data, hs.data)
+    else:
+        n, keep = _anti_count_fn(rel.capacity, rel.arity, hs.capacity,
+                                 hay.arity, cols)(rel.data, hs.data)
     n = int(n)
     if n == rel.count:
         return rel
     cap = next_pow2(n)
     out = _compact_fn(rel.capacity, rel.arity, cap)(rel.data, keep)
-    return Relation(out, n)
+    return Relation(out, n, rel.sorted_by)
 
 
 # ---------------------------------------------------------------------------
-# union / append
+# union / append / merge
 # ---------------------------------------------------------------------------
 def union(a: Relation, b: Relation, dedupe: bool = True) -> Relation:
+    """Concat-union.  With ``dedupe`` the result is lexsorted (dedup sorts);
+    without, the concatenation clears any sortedness marker."""
     if a.count == 0:
         return b
     if b.count == 0:
@@ -288,3 +432,68 @@ def union(a: Relation, b: Relation, dedupe: bool = True) -> Relation:
     data = jax.lax.dynamic_update_slice(data, b.data[:b.count], (a.count, 0))
     out = Relation(data, n)
     return dedup(out) if dedupe else out
+
+
+def _fit_rows(data, out_cap):
+    """Slice or PAD-extend to ``out_cap`` rows (rows >= count are PAD either
+    way) so the merge jit cache keys on the output bucket, not the store's."""
+    cap = data.shape[0]
+    if cap == out_cap:
+        return data
+    if cap > out_cap:
+        return data[:out_cap]
+    return jnp.concatenate(
+        [data, jnp.full((out_cap - cap, data.shape[1]), PAD, jnp.int32)])
+
+
+@lru_cache(maxsize=None)
+def _merge_fn(cap, bcap, ar):
+    """Merge small sorted delta B (bcap rows) into sorted store A (padded to
+    the output bucket ``cap``).  Only the delta side is binary-searched —
+    bcap probes, not cap — and the store side's shifts are recovered from a
+    histogram of the delta insertion points + cumsum (O(cap) streaming work):
+    output slot of B[i] = i + p_i where p_i = #{A lex< B[i]}, and output slot
+    of A[j] = j + #{i : p_i <= j}."""
+    out_cap = cap
+
+    @jax.jit
+    def f(A, B, na, nb):
+        ia = jnp.arange(cap, dtype=jnp.int32)
+        ib = jnp.arange(bcap, dtype=jnp.int32)
+        valid_b = ib < nb
+        # insertion position of each delta row in the store; PAD rows are
+        # lex-max so p only counts valid store rows
+        p = _lex_searchsorted_left(A, B)
+        h = jnp.zeros(cap + 1, jnp.int32)
+        h = h.at[jnp.where(valid_b, p, cap)].add(1, mode="drop")
+        cnt = jnp.cumsum(h)[:cap]            # #{valid delta rows lex< A[j]}
+        pos_a = jnp.where(ia < na, ia + cnt, out_cap)
+        pos_b = jnp.where(valid_b, ib + p, out_cap)
+        out = jnp.full((out_cap, ar), PAD, jnp.int32)
+        out = out.at[pos_a].set(A, mode="drop")
+        out = out.at[pos_b].set(B, mode="drop")
+        return out
+    return f
+
+
+def merge_union(a: Relation, b: Relation) -> Relation:
+    """Incremental sorted union of two DISJOINT row sets: two lexicographic
+    binary-search passes place every row, instead of concat + full resort.
+    Inputs are lexsorted first (free when they carry the marker); the output
+    is lexsorted and marked.  Disjointness (e.g. delta antijoined against the
+    store) is required — equal rows across inputs would collide on one slot."""
+    assert a.arity == b.arity
+    if b.count == 0:
+        return lexsort_rows(a)
+    if a.count == 0:
+        return lexsort_rows(b)
+    if b.count > a.count:   # search the smaller side into the larger
+        a, b = b, a
+    a = lexsort_rows(a)
+    b = lexsort_rows(b)
+    n = a.count + b.count
+    out_cap = next_pow2(n)
+    out = _merge_fn(out_cap, b.capacity, a.arity)(
+        _fit_rows(a.data, out_cap), b.data, a.count, b.count)
+    SORT_STATS.merges += 1
+    return Relation(out, n, lex_order(a.arity))

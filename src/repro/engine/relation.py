@@ -5,11 +5,23 @@ A ``Relation`` holds ``data`` (capacity, arity) int32 and a fill ``count``.
 Rows past ``count`` are padding (PAD).  All engine ops are shape-stable; data-
 dependent output sizes use a jitted count pass + host-side pow-2 bucket choice
 + a jitted materialize pass (bounded recompilation).
+
+Sortedness invariant
+--------------------
+``sorted_by`` records the column order by which the valid rows are known to
+be lexicographically sorted (``None`` = unknown).  A full lexsort (primary
+column 0, then 1, ...) is ``tuple(range(arity))``; a single-key sort from
+``ops.sort_by`` is ``(key_col,)``.  Ops that only drop or keep rows in place
+(filter/compact/antijoin) preserve the marker; ops that reorder or merge
+establish or clear it.  ``EngineKB`` keeps every store relation fully
+lexsorted so dedup/antijoin can skip their sort pass and unions become
+incremental sorted merges.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +34,16 @@ def next_pow2(n: int) -> int:
     return 1 if n <= 1 else 1 << (int(n - 1).bit_length())
 
 
+def lex_order(arity: int) -> Tuple[int, ...]:
+    """The ``sorted_by`` marker of a fully lexsorted relation."""
+    return tuple(range(arity))
+
+
 @dataclass
 class Relation:
     data: jax.Array          # (capacity, arity) int32, rows >= count are PAD
     count: int               # python int (host-side fill level)
+    sorted_by: Optional[Tuple[int, ...]] = None  # known sort order, or None
 
     @property
     def capacity(self):
@@ -35,22 +53,30 @@ class Relation:
     def arity(self):
         return self.data.shape[1]
 
+    @property
+    def is_lexsorted(self) -> bool:
+        """True iff the relation carries the full-lexsort marker."""
+        return self.sorted_by == lex_order(self.arity)
+
     def np_rows(self):
         return np.asarray(self.data[:self.count])
 
     @staticmethod
-    def from_numpy(rows: np.ndarray, capacity: int = 0) -> "Relation":
+    def from_numpy(rows: np.ndarray, capacity: int = 0,
+                   sorted_by: Optional[Tuple[int, ...]] = None) -> "Relation":
         n = rows.shape[0]
         cap = max(next_pow2(n), 1, capacity)
         arity = rows.shape[1] if rows.ndim == 2 else 1
         data = np.full((cap, arity), np.iinfo(np.int32).max, np.int32)
         if n:
             data[:n] = rows
-        return Relation(jnp.asarray(data), n)
+        return Relation(jnp.asarray(data), n, sorted_by)
 
     @staticmethod
     def empty(arity: int, capacity: int = 1) -> "Relation":
-        return Relation(jnp.full((max(capacity, 1), arity), PAD, jnp.int32), 0)
+        # an empty relation is trivially sorted by any order
+        return Relation(jnp.full((max(capacity, 1), arity), PAD, jnp.int32),
+                        0, lex_order(arity))
 
     def rows_set(self):
         return {tuple(int(x) for x in r) for r in self.np_rows()}

@@ -10,7 +10,11 @@ accounts separately.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on mesh construction
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x (the pinned 0.4.37): no AxisType
+    AxisType = None
 
 from repro.models.layers import MeshCtx
 
@@ -18,14 +22,24 @@ from repro.models.layers import MeshCtx
 import math
 
 
+def compat_make_mesh(shape, axis_names, *, devices=None):
+    """``jax.make_mesh`` across jax versions: pass ``axis_types`` when the
+    installed jax supports it, fall back to a plain mesh otherwise."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axis_names, devices=devices,
+                                 axis_types=(AxisType.Auto,) * len(axis_names))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(shape, axis_names, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = math.prod(shape)
     devs = jax.devices()[:n]
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devs)
+    return compat_make_mesh(shape, axes, devices=devs)
 
 
 def make_mesh_ctx(mesh) -> MeshCtx:
@@ -37,6 +51,4 @@ def make_mesh_ctx(mesh) -> MeshCtx:
 
 def make_host_mesh(dp: int = 1, tp: int = 1):
     """Small mesh over however many local devices exist (tests/examples)."""
-    mesh = jax.make_mesh((dp, tp), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
-    return mesh
+    return compat_make_mesh((dp, tp), ("data", "model"))

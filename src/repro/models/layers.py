@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 # ---------------------------------------------------------------------------
 # mesh context
@@ -129,7 +131,7 @@ def tp_col_einsum(spec_eq, x, w, mcx: MeshCtx, *, w_spec, out_spec,
     def inner(x_l, w_l):
         return jnp.einsum(spec_eq, x_l, w_l)
 
-    return jax.shard_map(inner, mesh=mcx.mesh, in_specs=(xs, w_spec),
+    return shard_map(inner, mesh=mcx.mesh, in_specs=(xs, w_spec),
                          out_specs=out_spec)(x, w)
 
 
@@ -142,7 +144,7 @@ def tp_row_einsum(spec_eq, x, w, mcx: MeshCtx, *, x_spec, w_spec, out_spec):
         y = jnp.einsum(spec_eq, x_l, w_l)
         return jax.lax.psum(y, mcx.tp)
 
-    return jax.shard_map(inner, mesh=mcx.mesh, in_specs=(x_spec, w_spec),
+    return shard_map(inner, mesh=mcx.mesh, in_specs=(x_spec, w_spec),
                          out_specs=out_spec)(x, w)
 
 
@@ -226,7 +228,7 @@ def _apply_mlp_explicit_tp(p, x, cfg, mcx: MeshCtx):
         y = jnp.einsum("bsf,fd->bsd", h, wd)
         return jax.lax.psum(y, mcx.tp)
 
-    y = jax.shard_map(inner, mesh=mcx.mesh,
+    y = shard_map(inner, mesh=mcx.mesh,
                       in_specs=tuple([xs] + w_specs),
                       out_specs=xs)(x, *ws)
     if "b_down" in p:
@@ -665,7 +667,7 @@ def gqa_decode_attention(p, x, cache, pos, cfg, mcx: MeshCtx):
         return out.reshape(q_l.shape[0], KV * G, hd), ck, cv
 
     bs = mcx.bspec(B)
-    out, ck, cv = jax.shard_map(
+    out, ck, cv = shard_map(
         inner,
         mesh=mcx.mesh,
         in_specs=(P(bs, None, None), P(bs, None, None),
@@ -814,7 +816,7 @@ def mla_decode_attention(p, x, cache, pos, cfg, mcx: MeshCtx):
         return ctx.astype(q_abs_l.dtype), cc, ckr
 
     bs = mcx.bspec(B)
-    ctx, cc, ckr = jax.shard_map(
+    ctx, cc, ckr = shard_map(
         inner,
         mesh=mcx.mesh,
         in_specs=(P(bs, None, None), P(bs, None, None),

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import layers as L
 from repro.models import ssm as SSM
@@ -49,7 +50,7 @@ def embed(tokens, table, mcx: MeshCtx):
     if table.shape[0] % mcx.tp_size:
         # vocab not divisible by TP: plain (replicated-table) gather
         return table[tokens]
-    return jax.shard_map(
+    return shard_map(
         inner, mesh=mcx.mesh,
         in_specs=(P(bs, None), P(mcx.tp, None)),
         out_specs=P(bs, None, None),

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import MeshCtx
+from repro.compat import shard_map
 
 
 def init_moe(cfg, rng):
@@ -120,7 +121,7 @@ def moe_fwd(p, x, cfg, mcx: Optional[MeshCtx]):
 
     if mcx is not None:
         bs = mcx.bspec(T)
-        y = jax.shard_map(
+        y = shard_map(
             shard_body,
             mesh=mcx.mesh,
             in_specs=(P(bs, None), P(bs, None), P(bs, None),
@@ -203,7 +204,7 @@ def _moe_a2a(p, xt, cfg, mcx: MeshCtx):
             gathered * flat_p[order][:, None].astype(xt_l.dtype))
         return y_l, aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body, mesh=mcx.mesh,
         in_specs=(P(shards, None), P(None, None),
                   P(mcx.tp, None, None), P(mcx.tp, None, None),

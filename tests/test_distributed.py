@@ -17,13 +17,12 @@ SCRIPT = textwrap.dedent("""
     import sys, json
     sys.path.insert(0, %r)
     import numpy as np, jax
-    from jax.sharding import AxisType
     from repro.engine.distributed import run_distributed_tc, DistConfig
+    from repro.launch.mesh import compat_make_mesh
 
     rng = np.random.default_rng(7)
     edges = np.unique(rng.integers(0, 40, (100, 2)).astype(np.int32), axis=0)
-    mesh = jax.make_mesh((4, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((4, 1), ("data", "model"))
     cfg = DistConfig(shard_cap=1 << 12, delta_cap=1 << 10, bucket_cap=1 << 9)
     t_store, count, triggers, rounds = run_distributed_tc(edges, mesh, cfg)
 

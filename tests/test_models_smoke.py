@@ -4,18 +4,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
 from repro.configs.base import ARCHS, get_config, get_smoke_config, SHAPES, \
     supported_cells
+from repro.launch.mesh import compat_make_mesh
 from repro.models import model as M
 from repro.models.layers import MeshCtx
 from repro.train import optimizer as OPT
 
 
 def _mcx():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     return MeshCtx(mesh=mesh, dp=("data",), tp="model")
 
 
