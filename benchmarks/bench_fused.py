@@ -1,0 +1,58 @@
+"""Fused vs two-phase round execution on the transitive-closure instance —
+the host-sync trajectory behind ``BENCH_tc.json``.
+
+Runs the same deep-fixpoint TC instance (long chain + random chords, the
+``bench_datalog`` layout whose recursive join hits both primary sort
+columns) through the two-phase executor (``REPRO_FUSED=0``: one blocking
+count pull per primitive call) and the fused executor (``REPRO_FUSED=1``:
+one pull per round, and one for the whole linear tail via
+``lax.while_loop``).  Reports wall time, trigger counts, rounds, derived and
+final fact counts, and the host-sync totals from ``HOST_SYNC_STATS`` — the
+two executors must agree on everything but the clock and the sync counts.
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit, timed, warmup
+from benchmarks.bench_datalog import TC, tc_facts
+from repro.engine import ops
+from repro.engine.materialize import EngineKB, materialize
+
+
+def run(smoke: bool = False):
+    # deep chain, few chords: many small-delta rounds — the regime where
+    # per-primitive host round-trips dominate the two-phase executor (the
+    # fused win shrinks on shallow, chord-heavy instances whose cost is
+    # join arithmetic, not bookkeeping)
+    B = tc_facts(n_chain=64 if smoke else 192, n_extra=8 if smoke else 16)
+    prev = os.environ.get("REPRO_FUSED")
+    try:
+        for flag, tag in (("0", "two_phase"), ("1", "fused")):
+            os.environ["REPRO_FUSED"] = flag
+            # warm TWICE on the SAME instance: the first pass converges the
+            # fused capacity planner (memoized per program fingerprint), the
+            # second compiles the round/fixpoint programs at the converged
+            # buckets — the timed run then measures steady state
+            warmup(TC, B, modes=("tg",))
+            warmup(TC, B, modes=("tg",))
+            ops.SORT_STATS.reset()
+            ops.HOST_SYNC_STATS.reset()
+            kb = EngineKB(TC, B)
+            st, t = timed(materialize, kb, mode="tg")
+            emit(f"tc.{tag}", t, st.derived,
+                 triggers=st.triggers, rounds=st.rounds,
+                 facts=kb.num_facts(),
+                 host_syncs=ops.HOST_SYNC_STATS.total(),
+                 count_pulls=ops.HOST_SYNC_STATS.count_pulls,
+                 fused_pulls=ops.HOST_SYNC_STATS.fused_pulls,
+                 fused_retries=ops.HOST_SYNC_STATS.fused_retries)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_FUSED", None)
+        else:
+            os.environ["REPRO_FUSED"] = prev
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,12 @@ compile-once-per-bucket).
 writes the rows to ``BENCH_smoke.json`` — the machine-readable perf
 trajectory CI uploads as an artifact on every push.  ``--out FILE`` overrides
 the JSON path (also usable without ``--smoke`` for full runs).
+
+Whenever the ``tc`` table runs (it is part of the default set), its fused vs
+two-phase rows are additionally written to ``BENCH_tc.json`` at the repo
+root — the stable per-commit trajectory of the transitive-closure
+benchmark: trigger counts, rounds, wall time, and host-sync counts for both
+executors.
 """
 from __future__ import annotations
 
@@ -17,8 +23,9 @@ import os
 import platform
 import sys
 
-from benchmarks import (bench_chasebench, bench_datalog, bench_linear,
-                        bench_rdfs, bench_scalability, bench_triggers)
+from benchmarks import (bench_chasebench, bench_datalog, bench_fused,
+                        bench_linear, bench_rdfs, bench_scalability,
+                        bench_triggers)
 from benchmarks import common
 
 TABLES = {
@@ -28,6 +35,7 @@ TABLES = {
     "triggers": bench_triggers.run,      # paper Table 5 / 8a
     "rdfs": bench_rdfs.run,              # paper Table 6
     "scalability": bench_scalability.run,  # paper Table 7
+    "tc": bench_fused.run,               # fused vs two-phase host syncs
 }
 
 
@@ -48,19 +56,28 @@ def main() -> None:
     for name in which:
         TABLES[name](smoke=args.smoke)
 
-    out = args.out or ("BENCH_smoke.json" if args.smoke else None)
-    if out:
+    def write_payload(path, rows, **extra):
         payload = {
             "mode": "smoke" if args.smoke else "full",
-            "tables": which,
             "python": platform.python_version(),
             "use_pallas": os.environ.get("REPRO_USE_PALLAS", "0"),
-            "results": common.RESULTS,
+            **extra,
+            "results": rows,
         }
-        with open(out, "w") as f:
+        with open(path, "w") as f:
             json.dump(payload, f, indent=2)
-        print(f"[bench] wrote {len(common.RESULTS)} rows to {out}",
-              file=sys.stderr)
+        print(f"[bench] wrote {len(rows)} rows to {path}", file=sys.stderr)
+
+    out = args.out or ("BENCH_smoke.json" if args.smoke else None)
+    if out:
+        write_payload(out, common.RESULTS, tables=which)
+    if "tc" in which:
+        # smoke runs write a separate file so they never clobber the
+        # committed full-run trajectory at BENCH_tc.json
+        write_payload("BENCH_tc_smoke.json" if args.smoke
+                      else "BENCH_tc.json",
+                      [r for r in common.RESULTS
+                       if r["name"].startswith("tc.")])
 
 
 if __name__ == "__main__":

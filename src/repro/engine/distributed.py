@@ -14,18 +14,26 @@ TG round:
 Everything is shape-stable (static per-shard capacities), so the whole
 multi-round loop lowers to a single XLA program (``lax.while_loop``) that the
 multi-pod dry-run compiles for the production mesh.
+
+The join / dedup / membership / compaction inner loops are the traceable
+cores from ``repro.engine.ops`` — the same code the single-device two-phase
+wrappers and the fused round executor run — so both execution tiers share
+one compiled-round architecture.  Pallas routing is pinned off here: the
+kernels are not shard_map-transformable in interpret mode.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.engine.ops import (compact_core, dedup_mask_core, join_count_core,
+                              join_gather_core, keysort_core, lexsort_core,
+                              member_mask_core, project_core)
 from repro.engine.relation import PAD
 
 
@@ -69,63 +77,6 @@ def _exchange(rows, target, ndev, axis, bucket_cap):
     return recv.reshape(ndev * bucket_cap, ar), jnp.sum(overflow)
 
 
-def _local_sort(rows, key_col):
-    order = jnp.argsort(rows[:, key_col])
-    return rows[order]
-
-
-def _local_dedup_mask(rows_sorted):
-    prev = jnp.concatenate([jnp.full((1, rows_sorted.shape[1]), PAD,
-                                     rows_sorted.dtype), rows_sorted[:-1]],
-                           axis=0)
-    neq = jnp.any(rows_sorted != prev, axis=1)
-    valid = rows_sorted[:, 0] != PAD
-    return jnp.logical_and(jnp.logical_or(neq, jnp.arange(
-        rows_sorted.shape[0]) == 0), valid)
-
-
-def _lexsort(rows):
-    keys = tuple(rows[:, c] for c in reversed(range(rows.shape[1])))
-    return rows[jnp.lexsort(keys)]
-
-
-def _member_mask(probe_rows, store_sorted):
-    """Row-membership of probe in lexsorted store (2-col relations)."""
-    n = store_sorted.shape[0]
-    lo = jnp.zeros(probe_rows.shape[0], jnp.int32)
-    hi = jnp.full(probe_rows.shape[0], n, jnp.int32)
-    steps = max(1, int(np.ceil(np.log2(n + 1))))
-    for c in range(probe_rows.shape[1]):
-        col = store_sorted[:, c]
-        key = probe_rows[:, c]
-        l, h = lo, hi
-        for _ in range(steps):
-            mid = (l + h) // 2
-            v = col[jnp.clip(mid, 0, n - 1)]
-            go = jnp.logical_and(mid < h, v < key)
-            l = jnp.where(go, mid + 1, l)
-            h = jnp.where(jnp.logical_and(mid < h, jnp.logical_not(go)), mid, h)
-        lo2 = l
-        l, h = lo, hi
-        for _ in range(steps):
-            mid = (l + h) // 2
-            v = col[jnp.clip(mid, 0, n - 1)]
-            go = jnp.logical_and(mid < h, v <= key)
-            l = jnp.where(go, mid + 1, l)
-            h = jnp.where(jnp.logical_and(mid < h, jnp.logical_not(go)), mid, h)
-        hi2 = l
-        lo, hi = lo2, hi2
-    return hi > lo
-
-
-def _compact(rows, mask, out_cap):
-    pos = jnp.cumsum(mask) - 1
-    idx = jnp.where(mask, pos, out_cap)
-    out = jnp.full((out_cap + 1, rows.shape[1]), PAD, jnp.int32)
-    out = out.at[idx].set(jnp.where(mask[:, None], rows, PAD), mode="drop")
-    return out[:out_cap]
-
-
 @dataclass(frozen=True)
 class DistConfig:
     shard_cap: int = 1 << 14         # per-shard store capacity
@@ -153,7 +104,7 @@ def distributed_tc_step(cfg: DistConfig, ndev: int):
 
     def body(e_by_src, t0):
         # t0: initial T = e, tuple-hash partitioned
-        e_sorted = _local_sort(e_by_src, 0)
+        e_sorted = keysort_core(e_by_src, 0, pallas=False)
 
         def round_fn(state):
             t_store, delta, total_trg, rounds, done, dropped = state
@@ -161,34 +112,24 @@ def distributed_tc_step(cfg: DistConfig, ndev: int):
             tgt = (_hash32(delta[:, 1].astype(jnp.uint32))
                    % jnp.uint32(ndev)).astype(jnp.int32)
             d_y, drop1 = _exchange(delta, tgt, ndev, axis, cfg.bucket_cap)
-            # 2) local join d_y.Y == e.src
-            d_sorted = _local_sort(d_y, 1)
-            dk = d_sorted[:, 1]
-            ek = e_sorted[:, 0]
-            lo = jnp.searchsorted(ek, dk, side="left")
-            hi = jnp.searchsorted(ek, dk, side="right")
-            per = jnp.where(dk != PAD, hi - lo, 0)
-            cum = jnp.cumsum(per) - per
-            total = jnp.sum(per)
+            # 2) local join d_y.Y == e.src, projected to (d.X, e.Z)
+            d_sorted = keysort_core(d_y, 1, pallas=False)
+            total, per, cum, lo = join_count_core(d_sorted, e_sorted, 1, 0)
             out_cap = cfg.delta_cap * 4
-            t_idx = jnp.arange(out_cap)
-            i = jnp.searchsorted(cum + per, t_idx, side="right")
-            i = jnp.clip(i, 0, d_sorted.shape[0] - 1)
-            j = jnp.clip(lo[i] + (t_idx - cum[i]), 0, e_sorted.shape[0] - 1)
-            valid = t_idx < total
-            new_rows = jnp.stack([d_sorted[i, 0], e_sorted[j, 1]], axis=1)
-            new_rows = jnp.where(valid[:, None], new_rows, PAD)
+            joined = join_gather_core(d_sorted, e_sorted, per, cum, lo,
+                                      total, out_cap)
+            new_rows = project_core(joined, (0, 3))
             drop_join = jnp.maximum(total - out_cap, 0)
             # 3) repartition by tuple hash, dedup, antijoin vs store
             tgt2 = (_tuple_hash(new_rows) % jnp.uint32(ndev)).astype(jnp.int32)
             arrived, drop2 = _exchange(new_rows, tgt2, ndev, axis,
                                        cfg.bucket_cap)
-            arr_sorted = _lexsort(arrived)
-            uniq = _local_dedup_mask(arr_sorted)
-            store_sorted = _lexsort(t_store)
+            arr_sorted = lexsort_core(arrived, pallas=False)
+            uniq = dedup_mask_core(arr_sorted, pallas=False)
+            store_sorted = lexsort_core(t_store, pallas=False)
             fresh = jnp.logical_and(uniq, jnp.logical_not(
-                _member_mask(arr_sorted, store_sorted)))
-            new_delta = _compact(arr_sorted, fresh, cfg.delta_cap)
+                member_mask_core(arr_sorted, store_sorted)))
+            new_delta = compact_core(arr_sorted, fresh, cfg.delta_cap)
             n_new = jnp.sum(fresh)
             drop_delta = jnp.maximum(n_new - cfg.delta_cap, 0)
             # 4) append to store (out-of-bounds writes dropped)

@@ -1,0 +1,675 @@
+"""Fused round executor: one XLA program per materialization round.
+
+The two-phase wrappers in ``repro.engine.ops`` pull every data-dependent
+count to the host (one blocking sync per primitive call) to pick pow-2
+output buckets — on small-delta rounds those host round-trips, not the join
+arithmetic, dominate wall time.  This module removes them:
+
+* A **capacity planner** (``_Caps``) pre-sizes every intermediate — filter /
+  join / project / dedup / antijoin outputs, per-predicate delta buffers and
+  store buckets — before a round is compiled.  Successful capacities are
+  memoized per program fingerprint so warmed-up runs plan right first try.
+* ``compile_rule_plan()`` stitches the traceable cores from ``ops`` into one
+  jitted, shape-stable program per (rule set, capacity plan): body filters,
+  the Def. 23 antijoin pre-restriction, the sort-merge join chain, head
+  projection, and the per-predicate absorb (dedup + antijoin vs store +
+  incremental sorted merge) all run in a single XLA executable.  The only
+  device->host traffic per round is one scalar bundle: counts, the trigger
+  total, and an overflow vector (``HOST_SYNC_STATS.fused_pulls``).
+* A **fused fixpoint driver** runs whole semi-naive/TG rounds this way, and
+  once the remaining computation is *linear* — every still-active rule has
+  exactly one body atom whose predicate can still change — it finishes the
+  entire fixpoint inside one ``lax.while_loop`` (the same architecture as
+  the sharded loop in ``repro.engine.distributed``), with loop-state buffers
+  donated to XLA on accelerator backends.
+
+Overflow semantics (mirrors the distributed bucket-exchange contract):
+every planned capacity gets an in-program overflow flag (``needed >
+planned``).  When any flag fires the round's outputs are discarded, the
+host doubles exactly the overflowed capacities, recompiles at the new
+buckets, and retries the same round from the inputs it still holds
+(``HOST_SYNC_STATS.fused_retries``).  Inside the fixpoint loop an overflow
+exits with the *last good* state, so the retry resumes mid-fixpoint — it
+never recomputes from scratch.
+
+Eligibility: Datalog rules (no existentials) with connected bodies.
+``materialize()`` falls back to the two-phase path for anything else.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.terms import is_var
+from repro.engine import ops
+from repro.engine.relation import PAD, Relation, lex_order, next_pow2
+
+_MAX_RETRIES = 40
+
+# successful planner capacities keyed by (program fingerprint, kind, name) —
+# reused across EngineKB instances so a warmed-up program never re-learns
+# its buckets (benchmarks warm on the same instance they time)
+_CAP_MEMO: dict = {}
+_CAP_MEMO_LIMIT = 8192
+
+# compiled round / fixpoint programs keyed by their full static signature;
+# bounded FIFO so superseded capacity plans don't strand XLA executables
+# forever in long-lived processes
+_COMPILE_CACHE: dict = {}
+_COMPILE_CACHE_LIMIT = 128
+
+
+def _cached_program(sig, build):
+    prog = _COMPILE_CACHE.get(sig)
+    if prog is None:
+        while len(_COMPILE_CACHE) >= _COMPILE_CACHE_LIMIT:
+            _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))
+        prog = _COMPILE_CACHE[sig] = build()
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# static rule plans
+# ---------------------------------------------------------------------------
+class RulePlan:
+    """Trace-time description of one Datalog rule: per-atom filters, the
+    Def. 23 pre-restriction slot, the left-deep join chain, and the head
+    projection.  ``key`` is a pure-python fingerprint used for compile-cache
+    and capacity-memo keys."""
+
+    def __init__(self, rule, dic):
+        from repro.engine.materialize import _atom_filters
+        self.head_pred = rule.head.pred
+        self.body_preds = tuple(a.pred for a in rule.body)
+        self.atoms = []            # (eq_pairs, const_pairs) per body atom
+        self.joins = []            # (lkey in cur, rkey in atom, eq2) per join
+        var_col: dict = {}
+        width = 0
+        self.ok = not rule.existentials
+        for j, atom in enumerate(rule.body):
+            eq, consts, vc = _atom_filters(atom, dic)
+            self.atoms.append((eq, consts))
+            if j == 0:
+                var_col = dict(vc)
+                width = atom.arity
+                continue
+            shared = [v for v in vc if v in var_col]
+            if not shared:
+                self.ok = False    # disconnected body -> cross join, not fused
+                break
+            v0 = shared[0]
+            eq2 = tuple((var_col[v], width + vc[v]) for v in shared[1:])
+            self.joins.append((var_col[v0], vc[v0], eq2))
+            for v, c in vc.items():
+                var_col.setdefault(v, width + c)
+            width += atom.arity
+        # Def. 23 pre-restriction: first body atom whose own columns
+        # determine the full head tuple (same choice as execute_rule)
+        self.pre = None
+        if self.ok:
+            for j, a in enumerate(rule.body):
+                _, _, vc = _atom_filters(a, dic)
+                if rule.head.args and all(is_var(t) and t in vc
+                                          for t in rule.head.args):
+                    self.pre = (j, tuple(vc[t] for t in rule.head.args))
+                    break
+            self.head_spec = tuple(
+                ("col", var_col[t]) if is_var(t) else ("const", dic.encode(t))
+                for t in rule.head.args)
+            self.key = (self.head_pred, self.body_preds, tuple(self.atoms),
+                        tuple(self.joins), self.pre, self.head_spec)
+
+
+def compile_rule_plan(rule, dic):
+    """Build the static plan for one rule, or None if the rule is outside
+    the fused fragment (existentials / disconnected body)."""
+    plan = RulePlan(rule, dic)
+    return plan if plan.ok else None
+
+
+# ---------------------------------------------------------------------------
+# traced pieces (built from the ops cores; no host interaction)
+# ---------------------------------------------------------------------------
+def _project_head_core(data, spec):
+    cols = []
+    for kind, v in spec:
+        if kind == "col":
+            cols.append(data[:, v])
+        else:
+            cols.append(jnp.full((data.shape[0],), v, jnp.int32))
+    valid = data[:, 0] != PAD
+    return jnp.where(valid[:, None], jnp.stack(cols, axis=1), PAD)
+
+
+def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
+                      prefilter=None):
+    """One rule body over pre-sized inputs.  ``inputs`` are lexsorted padded
+    blocks (stores / deltas — the sorted-store invariant is the fused
+    precondition), so primary-column join keys need no sort.  The Def. 23
+    pre-restriction either antijoins against ``pre_data`` (one haystack) or
+    calls the ``prefilter(rows, cols) -> keep_mask`` hook (the fixpoint loop
+    probes store | tail).  Returns (head_rows, triggers, overflow_flags)."""
+    ovfs = []
+    cur = None
+    cur_skey = None                # statically-known sort column of cur
+    for j, (eq, consts) in enumerate(plan.atoms):
+        data = inputs[j]
+        if eq or consts:
+            mask = ops.filter_mask_core(data, eq, consts)
+            data = ops.compact_core(data, mask, data.shape[0])
+        if plan.pre is not None and plan.pre[0] == j and (
+                pre_data is not None or prefilter is not None):
+            if prefilter is not None:
+                keep = prefilter(data, plan.pre[1])
+            else:
+                keep = ops.anti_keep_core(data, pre_data, plan.pre[1],
+                                          pallas=pallas)
+            data = ops.compact_core(data, keep, data.shape[0])
+        if cur is None:
+            cur, cur_skey = data, 0
+            continue
+        lk, rk, eq2 = plan.joins[j - 1]
+        ls = cur if cur_skey == lk else ops.keysort_core(cur, lk,
+                                                         pallas=pallas)
+        rs = data if rk == 0 else ops.keysort_core(data, rk, pallas=pallas)
+        total, per, cum, lo = ops.join_count_core(ls, rs, lk, rk)
+        cap = join_caps[j - 1]
+        ovfs.append(total > cap)
+        cur = ops.join_gather_core(ls, rs, per, cum, lo, total, cap)
+        cur_skey = lk              # output rows follow ls's key order
+        if eq2:
+            mask = ops.filter_mask_core(cur, eq2, ())
+            cur = ops.compact_core(cur, mask, cap)
+    triggers = jnp.sum(cur[:, 0] != PAD).astype(jnp.int32)
+    return _project_head_core(cur, plan.head_spec), triggers, ovfs
+
+
+def _absorb_traced(heads, fresh_mask_fn, into_data, into_count, delta_cap,
+                   pallas):
+    """Round-level redundancy filtering + merge for one predicate: concat
+    rule outputs, lexsort + first-occurrence dedup, keep rows passing
+    ``fresh_mask_fn`` (non-membership in the store — or in store | tail
+    inside the fixpoint loop), compact the fresh rows to the delta bucket,
+    and fold them into ``into_data`` (the store, or the loop's tail buffer)
+    with the incremental sorted merge.  Returns
+    (merged, new_count, delta, n_fresh, (delta_overflow, merge_overflow))."""
+    cat = heads[0] if len(heads) == 1 else jnp.concatenate(heads, axis=0)
+    s = ops.lexsort_core(cat, pallas=pallas)
+    uniq = ops.dedup_mask_core(s, pallas=pallas)
+    fresh_mask = jnp.logical_and(uniq, fresh_mask_fn(s))
+    n_fresh = jnp.sum(fresh_mask).astype(jnp.int32)
+    delta = ops.compact_core(s, fresh_mask, delta_cap)
+    new_count = into_count + n_fresh
+    merged = ops.merge_core(into_data, delta, into_count, n_fresh)
+    return (merged, new_count, delta, n_fresh,
+            (n_fresh > delta_cap, new_count > into_data.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# capacity planner
+# ---------------------------------------------------------------------------
+class _Caps:
+    """Pre-sizes every planned buffer; doubles on overflow; memoizes
+    successful sizes per program fingerprint."""
+
+    def __init__(self, fp, stores):
+        self.fp = fp
+        base = max([c for _, c in stores.values()] + [1])
+        self.store = {}
+        self.delta = {}
+        self.tail = {}
+        self.join = {}
+        for pred, (data, count) in stores.items():
+            # converged capacities from a previous run of this program
+            # dominate the cold-start guess (guesses must not drift upward
+            # with the memoized sizes, or every run re-plans and recompiles)
+            memo = _CAP_MEMO.get((fp, "store", pred), 0)
+            guess = memo or next_pow2(max(32, 4 * max(count, 1)))
+            self.store[pred] = max(guess, next_pow2(max(count, 1)))
+        self._delta_guess = next_pow2(max(64, 2 * base))
+
+    def delta_cap(self, pred):
+        if pred not in self.delta:
+            self.delta[pred] = (_CAP_MEMO.get((self.fp, "delta", pred), 0)
+                                or self._delta_guess)
+        return self.delta[pred]
+
+    def join_cap(self, plan, idx):
+        key = (plan.key, idx)
+        if key not in self.join:
+            self.join[key] = (_CAP_MEMO.get((self.fp, "join", key), 0)
+                              or next_pow2(max(64, 2 * self._delta_guess)))
+        return self.join[key]
+
+    def tail_cap(self, pred):
+        """Sorted-tail bucket for the fixpoint loop: new facts accumulate
+        here (O(tail) merges per iteration instead of O(store)) until it
+        fills and the host folds it into the store."""
+        if pred not in self.tail:
+            self.tail[pred] = (_CAP_MEMO.get((self.fp, "tail", pred), 0)
+                               or 4 * self.delta_cap(pred))
+        return self.tail[pred]
+
+    def double(self, label):
+        kind, name = label
+        if kind == "store":
+            self.store[name] *= 2
+        elif kind == "delta":
+            self.delta[name] *= 2
+        elif kind == "tail":
+            self.tail[name] *= 2
+        else:
+            self.join[name] *= 2
+
+    def memoize(self):
+        while len(_CAP_MEMO) >= _CAP_MEMO_LIMIT:
+            _CAP_MEMO.pop(next(iter(_CAP_MEMO)))
+        for pred, cap in self.store.items():
+            _CAP_MEMO[(self.fp, "store", pred)] = cap
+        for pred, cap in self.delta.items():
+            _CAP_MEMO[(self.fp, "delta", pred)] = cap
+        for pred, cap in self.tail.items():
+            _CAP_MEMO[(self.fp, "tail", pred)] = cap
+        for key, cap in self.join.items():
+            _CAP_MEMO[(self.fp, "join", key)] = cap
+
+
+# ---------------------------------------------------------------------------
+# compiled round program
+# ---------------------------------------------------------------------------
+def _round_signature(preds, caps, active, delta_in, use_prefilter, pallas):
+    return ("round", preds,
+            tuple(caps.store[p] for p in preds),
+            tuple((plan.key, jd, tuple(caps.join_cap(plan, i)
+                                       for i in range(len(plan.joins))))
+                  for plan, jd in active),
+            tuple((p, caps.delta_cap(p)) for p in delta_in),
+            tuple(sorted((p, caps.delta_cap(p)) for p in
+                         {plan.head_pred for plan, _ in active})),
+            use_prefilter, pallas)
+
+
+def _build_round(preds, caps, active, delta_in, use_prefilter, pallas):
+    """One materialization round as a single jitted program.
+
+    Inputs: per-pred store blocks (at planner capacities) + counts, plus the
+    live delta blocks (at planner delta capacities).  Outputs: new stores /
+    counts, new per-derived-pred deltas + counts, the round's trigger total,
+    and the overflow vector.  ``ovf_labels`` names each overflow slot so the
+    driver can double exactly the right capacity."""
+    derived = tuple(sorted({plan.head_pred for plan, _ in active}))
+    ovf_labels = []
+    for plan, jd in active:
+        for i in range(len(plan.joins)):
+            ovf_labels.append(("join", (plan.key, i)))
+    for pred in derived:
+        ovf_labels.append(("delta", pred))
+        ovf_labels.append(("store", pred))
+    join_caps = {id(plan): tuple(caps.join_cap(plan, i)
+                                 for i in range(len(plan.joins)))
+                 for plan, _ in active}
+    delta_caps = {p: caps.delta_cap(p) for p in derived}
+
+    def fn(store_datas, store_counts, delta_datas):
+        stores = dict(zip(preds, store_datas))
+        counts = dict(zip(preds, store_counts))
+        deltas = dict(zip(delta_in, delta_datas))
+        triggers = jnp.zeros((), jnp.int32)
+        ovfs = []
+        heads = {}
+        for plan, jd in active:
+            inputs = [deltas[bp] if j == jd else stores[bp]
+                      for j, bp in enumerate(plan.body_preds)]
+            pre_data = stores[plan.head_pred] if use_prefilter else None
+            head, trg, jovfs = _exec_rule_traced(plan, inputs, pre_data,
+                                                 join_caps[id(plan)], pallas)
+            triggers += trg
+            ovfs += jovfs
+            heads.setdefault(plan.head_pred, []).append(head)
+        out_deltas, out_dcounts = [], []
+        for pred in derived:
+            ns, nc, delta, nf, (od, os_) = _absorb_traced(
+                heads[pred],
+                lambda rows, p=pred: jnp.logical_not(
+                    ops.member_mask_core(rows, stores[p])),
+                stores[pred], counts[pred], delta_caps[pred], pallas)
+            stores[pred] = ns
+            counts[pred] = nc
+            out_deltas.append(delta)
+            out_dcounts.append(nf)
+            ovfs += [od, os_]
+        ovf_vec = (jnp.stack(ovfs) if ovfs
+                   else jnp.zeros((0,), jnp.bool_))
+        return (tuple(stores[p] for p in preds),
+                tuple(counts[p] for p in preds),
+                tuple(out_deltas), tuple(out_dcounts), triggers, ovf_vec)
+
+    return jax.jit(fn), ovf_labels, derived
+
+
+# ---------------------------------------------------------------------------
+# fused fixpoint (lax.while_loop over whole rounds)
+# ---------------------------------------------------------------------------
+def _linear_tail(intens_plans, live_preds):
+    """If every rule still reachable from the live deltas has exactly one
+    body atom over a still-changing predicate, the remaining fixpoint is
+    linear: return (changing predicate set S, [(plan, delta_pos)]).  Else
+    None, and the driver keeps stepping host-driven rounds."""
+    S = set(live_preds)
+    while True:
+        add = {p.head_pred for p in intens_plans
+               if any(bp in S for bp in p.body_preds)} - S
+        if not add:
+            break
+        S |= add
+    active = []
+    for plan in intens_plans:
+        hits = [j for j, bp in enumerate(plan.body_preds) if bp in S]
+        if not hits:
+            continue
+        if len(hits) != 1:
+            return None
+        active.append((plan, hits[0]))
+    return (tuple(sorted(S)), tuple(active)) if active else None
+
+
+def _fix_signature(s_preds, o_preds, caps, active, use_prefilter, pallas,
+                   max_rounds, donate):
+    return ("fix", s_preds, o_preds,
+            tuple(caps.store[p] for p in s_preds + o_preds),
+            tuple(caps.delta_cap(p) for p in s_preds),
+            tuple(caps.tail_cap(p) for p in s_preds),
+            tuple((plan.key, jd, tuple(caps.join_cap(plan, i)
+                                       for i in range(len(plan.joins))))
+                  for plan, jd in active),
+            use_prefilter, pallas, max_rounds, donate)
+
+
+def _build_fixpoint(s_preds, o_preds, caps, active, use_prefilter, pallas,
+                    max_rounds, donate):
+    """The remaining (linear) fixpoint as one ``lax.while_loop`` program.
+
+    Loop state: the deltas of the still-changing predicates plus a small
+    sorted *tail* buffer per predicate.  The phase-entry stores are loop
+    CONSTANTS — redundancy filtering probes (base store | tail), and each
+    round's fresh facts merge into the tail (O(tail) work per iteration,
+    not O(store)).  When a tail fills, the loop exits with the last good
+    state, the host folds the tail into its store once, and the loop
+    re-enters — the fixpoint resumes, never restarts.  Join/delta capacity
+    overflows exit the same way and retry after host-side doubling."""
+    derived = tuple(sorted({plan.head_pred for plan, _ in active}))
+    ovf_labels = []
+    for plan, jd in active:
+        for i in range(len(plan.joins)):
+            ovf_labels.append(("join", (plan.key, i)))
+    for pred in derived:
+        ovf_labels.append(("delta", pred))
+        ovf_labels.append(("tail", pred))
+    n_ovf = len(ovf_labels)
+    join_caps = {id(plan): tuple(caps.join_cap(plan, i)
+                                 for i in range(len(plan.joins)))
+                 for plan, _ in active}
+    delta_caps = {p: caps.delta_cap(p) for p in s_preds}
+
+    def fn(s_base, w_datas, w_counts, d_datas, d_counts, o_datas, rounds):
+        base = dict(zip(s_preds, s_base))
+        others = dict(zip(o_preds, o_datas))
+
+        def not_seen(rows, pred, tails, cols=None):
+            """keep-mask: rows whose tuple is in neither the phase-entry
+            store nor the tail of ``pred``."""
+            sel = rows if cols is None else ops.project_core(rows, cols)
+            seen = jnp.logical_or(
+                ops.member_mask_core(sel, base[pred]),
+                ops.member_mask_core(sel, tails[pred]))
+            valid = rows[:, 0] != PAD
+            return jnp.logical_and(valid, jnp.logical_not(seen))
+
+        def body(state):
+            w_datas, w_counts, d_datas, d_counts, rounds, trg, drv, _ = state
+            tails = dict(zip(s_preds, w_datas))
+            wcnt = dict(zip(s_preds, w_counts))
+            deltas = dict(zip(s_preds, d_datas))
+            stores = dict(others)
+            triggers = jnp.zeros((), jnp.int32)
+            ovfs = []
+            heads = {}
+            for plan, jd in active:
+                inputs = []
+                for j, bp in enumerate(plan.body_preds):
+                    # linear tail: the only S-pred body atom is the delta
+                    inputs.append(deltas[bp] if j == jd else stores[bp])
+                head, t, jovfs = _exec_rule_traced(
+                    plan, inputs, None, join_caps[id(plan)], pallas,
+                    prefilter=((lambda rows, cols, p=plan.head_pred:
+                                not_seen(rows, p, tails, cols))
+                               if use_prefilter else None))
+                triggers += t
+                ovfs += jovfs
+                heads.setdefault(plan.head_pred, []).append(head)
+            new_w, new_wc, new_deltas, new_dcounts = {}, {}, {}, {}
+            for pred in s_preds:
+                if pred in heads:
+                    nw, nc, delta, nf, (od, ow) = _absorb_traced(
+                        heads[pred],
+                        lambda rows, p=pred: not_seen(rows, p, tails),
+                        tails[pred], wcnt[pred], delta_caps[pred], pallas)
+                    new_w[pred], new_wc[pred] = nw, nc
+                    new_deltas[pred], new_dcounts[pred] = delta, nf
+                    ovfs += [od, ow]
+                else:   # in S but not derived by any active rule: drains
+                    new_w[pred] = tails[pred]
+                    new_wc[pred] = wcnt[pred]
+                    new_deltas[pred] = jnp.full_like(deltas[pred], PAD)
+                    new_dcounts[pred] = jnp.zeros((), jnp.int32)
+            ovf_vec = (jnp.stack(ovfs) if ovfs
+                       else jnp.zeros((0,), jnp.bool_))
+            bad = jnp.any(ovf_vec) if n_ovf else jnp.array(False)
+
+            def keep(old, new):
+                return jax.tree_util.tree_map(
+                    lambda o, n: jnp.where(bad, o, n), old, new)
+
+            return (keep(w_datas, tuple(new_w[p] for p in s_preds)),
+                    keep(w_counts, tuple(new_wc[p] for p in s_preds)),
+                    keep(d_datas, tuple(new_deltas[p] for p in s_preds)),
+                    keep(d_counts, tuple(new_dcounts[p] for p in s_preds)),
+                    rounds + jnp.where(bad, 0, 1),
+                    trg + jnp.where(bad, 0, triggers),
+                    drv + jnp.where(bad, 0,
+                                    sum(new_dcounts[p] for p in s_preds)),
+                    ovf_vec)
+
+        def cond(state):
+            _, _, _, d_counts, rounds, _, _, ovf_vec = state
+            live = sum(d_counts) > 0
+            ok = jnp.logical_not(jnp.any(ovf_vec)) if n_ovf else True
+            return jnp.logical_and(jnp.logical_and(live, ok),
+                                   rounds < max_rounds)
+
+        state = (w_datas, w_counts, d_datas, d_counts, rounds,
+                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                 jnp.zeros((n_ovf,), jnp.bool_))
+        return jax.lax.while_loop(cond, body, state)
+
+    # loop-state buffers are donated on accelerator backends (exits return
+    # the last-good state, so the donated inputs are never needed again)
+    return (jax.jit(fn, donate_argnums=(1, 3) if donate else ()),
+            ovf_labels)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000):
+    """Fused-program materialization of ``kb``.  Returns MatStats, or None
+    when the program is outside the fused fragment (the caller falls back to
+    the two-phase executor)."""
+    from repro.engine.materialize import MatStats
+    program = kb.program
+    plans = {}
+    for rule in program.rules:
+        plan = compile_rule_plan(rule, kb.dict)
+        if plan is None:
+            return None
+        plans[id(rule)] = plan
+
+    preds = tuple(sorted(kb.rels))
+    use_prefilter = mode == "tg"
+    pallas = ops.use_pallas()
+    donate = jax.default_backend() != "cpu"
+    st = MatStats(mode=mode)
+    st.extra["fused"] = True
+
+    # fused precondition: lexsorted, set-semantic stores
+    stores, counts = {}, {}
+    for p in preds:
+        rel = kb.rels[p]
+        if rel.count and not rel.is_lexsorted:
+            rel = ops.dedup(rel)
+        stores[p], counts[p] = rel.data, rel.count
+    fp = (tuple(plans[id(r)].key for r in program.rules),
+          next_pow2(max(sum(counts.values()), 1)))
+    caps = _Caps(fp, {p: (stores[p], counts[p]) for p in preds})
+    for p in preds:
+        stores[p] = ops.fit_rows(stores[p], caps.store[p])
+
+    ext_plans = [plans[id(r)] for r in program.extensional_rules()]
+    int_plans = [plans[id(r)] for r in program.intensional_rules()]
+    deltas: dict = {}           # pred -> (data at planner delta cap, count)
+
+    def run_round(active, delta_preds, is_ext=False):
+        nonlocal stores, counts
+        prefilter = use_prefilter and not is_ext   # no Def. 23 in round 1
+        for _ in range(_MAX_RETRIES):
+            sig = _round_signature(preds, caps, active, delta_preds,
+                                   prefilter, pallas)
+            fn, ovf_labels, derived = _cached_program(
+                sig, lambda: _build_round(preds, caps, active, delta_preds,
+                                          prefilter, pallas))
+            out = fn(tuple(stores[p] for p in preds),
+                     tuple(jnp.int32(counts[p]) for p in preds),
+                     tuple(ops.fit_rows(deltas[p][0], caps.delta_cap(p))
+                           for p in delta_preds))
+            n_stores, n_counts, n_deltas, n_dcounts, trg, ovf_vec = out
+            pulled = jax.device_get((n_counts, n_dcounts, trg, ovf_vec))
+            ops.HOST_SYNC_STATS.fused_pulls += 1
+            cnts, dcnts, trg, ovf = pulled
+            if not ovf.any():
+                stores = dict(zip(preds, n_stores))
+                counts = {p: int(c) for p, c in zip(preds, cnts)}
+                st.triggers += int(trg)
+                new = {}
+                for p, d, c in zip(derived, n_deltas, dcnts):
+                    st.derived += int(c)
+                    if int(c):
+                        new[p] = (d, int(c))
+                return new
+            ops.HOST_SYNC_STATS.fused_retries += 1
+            for flag, label in zip(ovf, ovf_labels):
+                if flag:
+                    caps.double(label)
+            for p in preds:
+                stores[p] = ops.fit_rows(stores[p], caps.store[p])
+        raise RuntimeError("fused round: capacity retries exhausted")
+
+    # round 1: extensional rules over B
+    ext_active = tuple((plan, None) for plan in ext_plans)
+    if ext_active:
+        deltas = run_round(ext_active, (), is_ext=True)
+    st.rounds = 1
+
+    # fixpoint rounds
+    while deltas and st.rounds < max_rounds:
+        live = tuple(sorted(deltas))
+        tail = _linear_tail(int_plans, live)
+        if tail is not None:
+            s_preds, active = tail
+            o_preds = tuple(p for p in preds if p not in s_preds)
+            w = {p: None for p in s_preds}   # sorted tails: (data, count)
+            retries = 0
+            while True:
+                sig = _fix_signature(s_preds, o_preds, caps, active,
+                                     use_prefilter, pallas, max_rounds,
+                                     donate)
+                fn, ovf_labels = _cached_program(
+                    sig, lambda: _build_fixpoint(
+                        s_preds, o_preds, caps, active, use_prefilter,
+                        pallas, max_rounds, donate))
+                out = fn(
+                    tuple(stores[p] for p in s_preds),
+                    tuple(jnp.array(ops.fit_rows(w[p][0], caps.tail_cap(p)))
+                          if w[p] else
+                          jnp.full((caps.tail_cap(p), kb.arities[p]), PAD,
+                                   jnp.int32) for p in s_preds),
+                    tuple(jnp.int32(w[p][1] if w[p] else 0)
+                          for p in s_preds),
+                    tuple(jnp.array(ops.fit_rows(deltas[p][0],
+                                                 caps.delta_cap(p)))
+                          if p in deltas else
+                          jnp.full((caps.delta_cap(p), kb.arities[p]), PAD,
+                                   jnp.int32) for p in s_preds),
+                    tuple(jnp.int32(deltas[p][1] if p in deltas else 0)
+                          for p in s_preds),
+                    tuple(stores[p] for p in o_preds),
+                    jnp.int32(st.rounds))
+                w_datas, w_counts, d_datas, d_counts, rounds, trg, drv, \
+                    ovf_vec = out
+                pulled = jax.device_get((w_counts, d_counts, rounds, trg,
+                                         drv, ovf_vec))
+                ops.HOST_SYNC_STATS.fused_pulls += 1
+                wcnts, dcnts, rounds, trg, drv, ovf = pulled
+                st.rounds = int(rounds)
+                st.triggers += int(trg)
+                st.derived += int(drv)
+                deltas = {p: (d, int(c)) for p, d, c in
+                          zip(s_preds, d_datas, dcnts) if int(c)}
+                # fold tails into the stores (exits are rare: done, a full
+                # tail, or a capacity retry)
+                ar = kb.arities
+                for p, d, c in zip(s_preds, w_datas, wcnts):
+                    w[p] = None
+                    if int(c):
+                        merged = ops.merge_union(
+                            Relation(stores[p], counts[p], lex_order(ar[p])),
+                            Relation(d, int(c), lex_order(ar[p])))
+                        counts[p] = merged.count
+                        caps.store[p] = max(caps.store[p], merged.capacity)
+                        stores[p] = ops.fit_rows(merged.data, caps.store[p])
+                if not ovf.any():
+                    deltas = {}
+                    break
+                doubled = False
+                for flag, label in zip(ovf, ovf_labels):
+                    if not flag:
+                        continue
+                    if label[0] == "tail":
+                        # tail-full exit: the fold above made room; double
+                        # only when even an empty tail cannot hold one
+                        # round's fresh rows
+                        if int(wcnts[s_preds.index(label[1])]) == 0:
+                            caps.double(label)
+                            doubled = True
+                    else:
+                        caps.double(label)
+                        doubled = True
+                if doubled:
+                    ops.HOST_SYNC_STATS.fused_retries += 1
+                    retries += 1
+                    if retries > _MAX_RETRIES:
+                        raise RuntimeError(
+                            "fused fixpoint: capacity retries exhausted")
+            break
+        active = tuple((plans[id(r)], j)
+                       for r in program.intensional_rules()
+                       for j, a in enumerate(r.body) if a.pred in deltas)
+        if not active:
+            break
+        deltas = run_round(active, live)
+        st.rounds += 1
+
+    for p in preds:
+        kb.rels[p] = Relation(stores[p], counts[p],
+                              lex_order(kb.rels[p].arity))
+    caps.memoize()
+    return st

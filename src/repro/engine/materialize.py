@@ -15,6 +15,13 @@ Modes
 
 Trigger counts = total body instantiations (join output rows / filtered
 linear-scan rows) — the paper's hardware-independent work metric.
+
+With ``REPRO_FUSED=1``, the ``tg``/``tg_noopt`` modes route through the
+fused round executor (``repro.engine.fused``): whole rounds compile to one
+XLA program, and linear-tail fixpoints run inside ``lax.while_loop``.
+Programs outside the fused fragment (existentials, disconnected bodies)
+fall back to the two-phase executor below; results are identical either
+way (gated by ``tests/test_differential.py``).
 """
 from __future__ import annotations
 
@@ -150,7 +157,8 @@ def execute_rule(kb: EngineKB, rule: Rule, inputs: List[Relation],
         head = ops.project(cur, tuple(c if c is not None else 0
                                       for c in spec))
         if any(c is None for c in spec):
-            data = np.asarray(head.data)
+            data = np.array(head.data)   # writable copy (np.asarray views
+            # jax buffers read-only)
             for i, (t, c) in enumerate(zip(rule.head.args, spec)):
                 if c is None:
                     data[:head.count, i] = dic.encode(t)
@@ -194,6 +202,11 @@ def materialize(kb: EngineKB, mode: str = "tg", max_rounds: int = 10_000,
     if mode == "tg_linear":
         return _materialize_tg_linear(kb, tg_eg, cleaning)
     assert mode in ("seminaive", "tg", "tg_noopt")
+    if mode in ("tg", "tg_noopt") and ops.fused_enabled():
+        from repro.engine.fused import materialize_fused
+        st = materialize_fused(kb, mode=mode, max_rounds=max_rounds)
+        if st is not None:      # None: outside the fused fragment, fall back
+            return st
     per_rule = mode == "seminaive"
     st = MatStats(mode=mode)
     program = kb.program

@@ -1,8 +1,26 @@
 """Vectorized relational operators on padded int32 relations.
 
-All functions are shape-stable and jit-cached per capacity bucket.  Data-
-dependent sizes follow the two-phase pattern: a jitted *count* pass, a host
-pow-2 bucket choice, then a jitted *materialize* pass.
+Execution contracts
+-------------------
+Every primitive exists in two layers:
+
+* **Traceable cores** (``*_core`` functions): pure, shape-stable jnp
+  functions with no host interaction — callable inside any jitted program
+  (the fused round executor in ``repro.engine.fused``, the ``shard_map``
+  bodies in ``repro.engine.distributed``, or the two-phase wrappers below).
+  Cores never choose capacities; output capacities are arguments.
+* **Two-phase host wrappers** (``dedup``/``filter_rows``/``sm_join``/
+  ``antijoin``/...): the host-facing API over ``Relation`` values.  Data-
+  dependent sizes follow the two-phase pattern: a jitted *count* pass, a
+  blocking device->host pull of the count (recorded in ``HOST_SYNC_STATS``),
+  a host pow-2 bucket choice, then a jitted *materialize* pass.
+
+``REPRO_FUSED=1`` makes ``materialize()`` route whole rounds (and, for
+linear-tail fixpoints, the whole fixpoint via ``lax.while_loop``) through one
+compiled XLA program built from the cores — see ``repro.engine.fused`` for
+the capacity-planner / overflow-doubling contract.  The wrappers here remain
+the reference path (``REPRO_FUSED=0``) and the fallback for programs the
+fused planner does not cover (existential rules).
 
 Sortedness invariant
 --------------------
@@ -23,6 +41,14 @@ probe inner loops through the Pallas kernels in ``repro.kernels.ops``
 CPU, compiled on TPU).  The jnp implementations here are the reference path
 and the default.  Multi-column lexsorts and the merge-union binary searches
 stay on the jnp path in both modes (the kernels are single-key).
+
+Env-flag matrix
+---------------
+=================== ======= ====================================================
+``REPRO_USE_PALLAS`` ``0``   Pallas kernels for sort/unique/probe inner loops
+``REPRO_SORTED_STORE`` ``1`` sortedness markers + incremental merge-union
+``REPRO_FUSED``      ``0``   fused round executor (one XLA program per round)
+=================== ======= ====================================================
 """
 from __future__ import annotations
 
@@ -38,7 +64,7 @@ from repro.engine.relation import PAD, Relation, lex_order, next_pow2
 
 
 # ---------------------------------------------------------------------------
-# dispatch switches + sort-pass accounting
+# dispatch switches + sort-pass / host-sync accounting
 # ---------------------------------------------------------------------------
 def use_pallas() -> bool:
     """Route sort/unique/probe inner loops through the Pallas kernels."""
@@ -48,6 +74,11 @@ def use_pallas() -> bool:
 def sorted_store_enabled() -> bool:
     """Honor ``sorted_by`` markers (skip redundant sorts, merge unions)."""
     return os.environ.get("REPRO_SORTED_STORE", "1") != "0"
+
+
+def fused_enabled() -> bool:
+    """Route eligible materialization rounds through the fused executor."""
+    return os.environ.get("REPRO_FUSED", "0") == "1"
 
 
 _KERNELS = None
@@ -80,244 +111,142 @@ class SortStats:
 SORT_STATS = SortStats()
 
 
-# ---------------------------------------------------------------------------
-# sorting / dedup
-# ---------------------------------------------------------------------------
-@lru_cache(maxsize=None)
-def _lexsort_fn(cap, ar):
-    @jax.jit
-    def f(data):
-        keys = tuple(data[:, c] for c in reversed(range(ar)))
-        order = jnp.lexsort(keys)
-        return data[order]
-    return f
+@dataclass
+class HostSyncStats:
+    """Blocking device->host synchronization points.
+
+    Each two-phase wrapper pulls its count-pass result to the host before it
+    can pick an output bucket (``count_pulls`` — one per primitive call).
+    The fused executor pulls once per compiled round / fixpoint attempt
+    (``fused_pulls``) and counts capacity-overflow recompile-and-retry
+    events (``fused_retries``).  ``total()`` is the engine's host-sync work
+    metric, reported next to trigger counts by the benchmarks."""
+    count_pulls: int = 0
+    fused_pulls: int = 0
+    fused_retries: int = 0
+
+    def reset(self):
+        self.count_pulls = self.fused_pulls = self.fused_retries = 0
+
+    def total(self) -> int:
+        return self.count_pulls + self.fused_pulls
 
 
-@lru_cache(maxsize=None)
-def _keysort_pallas_fn(cap, ar, key_col):
-    K = _kernels()
-    tile = min(1024, cap)
-
-    @jax.jit
-    def f(data):
-        keys = data[:, key_col]
-        vals = jnp.arange(cap, dtype=jnp.int32)
-        _, perm = K.sort_with_payload(keys, vals, tile=tile)
-        return data[perm]
-    return f
+HOST_SYNC_STATS = HostSyncStats()
 
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
 
-def lexsort_rows(rel: Relation) -> Relation:
-    order = lex_order(rel.arity)
-    if sorted_store_enabled() and rel.sorted_by == order:
-        SORT_STATS.skipped += 1
-        return rel
-    if use_pallas() and rel.arity == 1 and _is_pow2(rel.capacity):
-        data = _keysort_pallas_fn(rel.capacity, 1, 0)(rel.data)
-    else:
-        data = _lexsort_fn(rel.capacity, rel.arity)(rel.data)
-    SORT_STATS.lexsort += 1
-    return Relation(data, rel.count, order)
-
-
-@lru_cache(maxsize=None)
-def _dedup_count_fn(cap, ar):
-    @jax.jit
-    def f(sorted_data):
-        prev = jnp.roll(sorted_data, 1, axis=0)
-        neq = jnp.any(sorted_data != prev, axis=1)
-        neq = neq.at[0].set(True)
-        valid = sorted_data[:, 0] != PAD
-        return jnp.sum(jnp.logical_and(neq, valid)), jnp.logical_and(neq, valid)
-    return f
-
-
-@lru_cache(maxsize=None)
-def _dedup_count_pallas_fn(cap, ar):
-    K = _kernels()
-
-    @jax.jit
-    def f(sorted_data):
-        mask = K.unique_mask(sorted_data).astype(bool)
-        return jnp.sum(mask), mask
-    return f
-
-
-@lru_cache(maxsize=None)
-def _compact_fn(cap, ar, out_cap):
-    @jax.jit
-    def f(data, mask):
-        pos = jnp.cumsum(mask) - 1
-        idx = jnp.where(mask, pos, out_cap)
-        out = jnp.full((out_cap + 1, ar), PAD, jnp.int32)
-        out = out.at[idx].set(data, mode="drop")
-        return out[:out_cap]
-    return f
-
-
-def dedup(rel: Relation) -> Relation:
-    """Sort (skipped on a lexsorted input) + adjacent-unique + compact.
-    Output is lexsorted and marked."""
-    if rel.count == 0:
-        return Relation.empty(rel.arity)
-    s = lexsort_rows(rel)
-    if use_pallas():
-        n, mask = _dedup_count_pallas_fn(s.capacity, s.arity)(s.data)
-    else:
-        n, mask = _dedup_count_fn(s.capacity, s.arity)(s.data)
-    n = int(n)
-    cap = next_pow2(n)
-    out = _compact_fn(s.capacity, s.arity, cap)(s.data, mask)
-    return Relation(out, n, lex_order(rel.arity))
-
-
-# ---------------------------------------------------------------------------
-# filters / projection
-# ---------------------------------------------------------------------------
-@lru_cache(maxsize=None)
-def _filter_count_fn(cap, ar, eq_pairs, const_pairs):
-    @jax.jit
-    def f(data):
-        valid = data[:, 0] != PAD
-        for a, b in eq_pairs:
-            valid &= data[:, a] == data[:, b]
-        for c, v in const_pairs:
-            valid &= data[:, c] == v
-        return jnp.sum(valid), valid
-    return f
-
-
-def filter_rows(rel: Relation, eq_pairs=(), const_pairs=()) -> Relation:
-    """Select rows with col equality (repeated vars) / constant constraints.
-    Compaction keeps row order, so the sortedness marker is preserved."""
-    if rel.count == 0 or (not eq_pairs and not const_pairs):
-        return rel
-    n, mask = _filter_count_fn(rel.capacity, rel.arity, tuple(eq_pairs),
-                               tuple(const_pairs))(rel.data)
-    n = int(n)
-    cap = next_pow2(n)
-    out = _compact_fn(rel.capacity, rel.arity, cap)(rel.data, mask)
-    return Relation(out, n, rel.sorted_by)
-
-
-@lru_cache(maxsize=None)
-def _project_fn(cap, ar, cols):
-    @jax.jit
-    def f(data):
-        valid = data[:, 0] != PAD
-        out = data[:, jnp.array(cols, jnp.int32)]
-        return jnp.where(valid[:, None], out, PAD)
-    return f
-
-
-def project(rel: Relation, cols) -> Relation:
-    if not cols:
-        cols = (0,)
-    return Relation(_project_fn(rel.capacity, rel.arity, tuple(cols))(rel.data),
-                    rel.count)
-
-
-# ---------------------------------------------------------------------------
-# sort-merge join (single int32 key column; multi-column keys are packed by
-# the planner with post-join verification)
-# ---------------------------------------------------------------------------
-@lru_cache(maxsize=None)
-def _sortby_fn(cap, ar, key_col):
-    @jax.jit
-    def f(data):
-        order = jnp.argsort(data[:, key_col])
+# ===========================================================================
+# traceable cores — pure jnp, shape-stable, no host interaction.  Safe to
+# call inside jit / while_loop / shard_map; static args (column indices,
+# capacities, pallas routing) must be python values at trace time.
+# ===========================================================================
+def lexsort_core(data, pallas: bool | None = None):
+    """Full-row lexicographic sort of a padded (cap, ar) block (PAD rows
+    sort last).  Single-column blocks route through the Pallas sort kernel
+    when ``pallas`` (pow-2 caps only)."""
+    cap, ar = data.shape
+    if pallas is None:
+        pallas = use_pallas()
+    if pallas and ar == 1 and _is_pow2(cap):
+        return keysort_core(data, 0, pallas=True)
+    if ar == 2 and _pack_ok():
+        with jax.experimental.enable_x64():
+            order = jnp.argsort(pack_rows2(data)).astype(jnp.int32)
         return data[order]
-    return f
+    keys = tuple(data[:, c] for c in reversed(range(ar)))
+    return data[jnp.lexsort(keys)]
 
 
-def sort_by(rel: Relation, key_col: int) -> Relation:
-    """Sort by one key column; skipped when ``sorted_by`` already starts with
-    that column (a lexsorted relation is sorted by its primary column)."""
-    if (sorted_store_enabled() and rel.sorted_by
-            and rel.sorted_by[0] == key_col):
-        SORT_STATS.skipped += 1
-        return rel
-    if use_pallas() and _is_pow2(rel.capacity):
-        data = _keysort_pallas_fn(rel.capacity, rel.arity, key_col)(rel.data)
-    else:
-        data = _sortby_fn(rel.capacity, rel.arity, key_col)(rel.data)
-    SORT_STATS.key_sort += 1
-    return Relation(data, rel.count, (key_col,))
+def keysort_core(data, key_col: int, pallas: bool | None = None):
+    """Sort rows of a padded block by one key column."""
+    cap = data.shape[0]
+    if pallas is None:
+        pallas = use_pallas()
+    if pallas and _is_pow2(cap):
+        K = _kernels()
+        vals = jnp.arange(cap, dtype=jnp.int32)
+        _, perm = K.sort_with_payload(data[:, key_col], vals,
+                                      tile=min(1024, cap))
+        return data[perm]
+    return data[jnp.argsort(data[:, key_col])]
 
 
-@lru_cache(maxsize=None)
-def _join_count_fn(lcap, lar, rcap, rar, lkey, rkey):
-    @jax.jit
-    def f(l, r):
-        lk = l[:, lkey]
-        rk = r[:, rkey]
-        lo = jnp.searchsorted(rk, lk, side="left")
-        hi = jnp.searchsorted(rk, lk, side="right")
-        valid = lk != PAD
-        per = jnp.where(valid, hi - lo, 0)
-        cum = jnp.cumsum(per) - per           # exclusive prefix
-        return jnp.sum(per), per, cum, lo
-    return f
+def dedup_mask_core(sorted_data, pallas: bool | None = None):
+    """First-occurrence mask over lexsorted rows (PAD rows excluded)."""
+    if pallas is None:
+        pallas = use_pallas()
+    if pallas:
+        K = _kernels()
+        return K.unique_mask(sorted_data).astype(bool)
+    prev = jnp.roll(sorted_data, 1, axis=0)
+    neq = jnp.any(sorted_data != prev, axis=1)
+    neq = neq.at[0].set(True)
+    valid = sorted_data[:, 0] != PAD
+    return jnp.logical_and(neq, valid)
 
 
-@lru_cache(maxsize=None)
-def _join_mat_fn(lcap, lar, rcap, rar, out_cap):
-    @jax.jit
-    def f(l, r, per, cum, lo, total):
-        t = jnp.arange(out_cap)
-        # left row for output t: last i with cum[i] <= t
-        i = jnp.searchsorted(cum + per, t, side="right")
-        i = jnp.clip(i, 0, lcap - 1)
-        j = lo[i] + (t - cum[i])
-        j = jnp.clip(j, 0, rcap - 1)
-        valid = t < total
-        lrow = l[i]
-        rrow = r[j]
-        out = jnp.concatenate([lrow, rrow], axis=1)
-        return jnp.where(valid[:, None], out, PAD)
-    return f
+def filter_mask_core(data, eq_pairs=(), const_pairs=()):
+    """Row-selection mask: valid rows meeting column-equality (repeated
+    vars) and column-constant constraints."""
+    valid = data[:, 0] != PAD
+    for a, b in eq_pairs:
+        valid &= data[:, a] == data[:, b]
+    for c, v in const_pairs:
+        valid &= data[:, c] == v
+    return valid
 
 
-def sm_join(l: Relation, r: Relation, lkey: int, rkey: int):
-    """Sort-merge join; returns (Relation out, matches) where out columns are
-    [l cols..., r cols...] and ``matches`` is the trigger count.  Input sorts
-    are skipped for relations already sorted by their join key."""
-    if l.count == 0 or r.count == 0:
-        return Relation.empty(l.arity + r.arity), 0
-    ls = sort_by(l, lkey)
-    rs = sort_by(r, rkey)
-    total, per, cum, lo = _join_count_fn(
-        l.capacity, l.arity, r.capacity, r.arity, lkey, rkey)(ls.data, rs.data)
-    total = int(total)
-    if total == 0:
-        return Relation.empty(l.arity + r.arity), 0
-    out_cap = next_pow2(total)
-    out = _join_mat_fn(l.capacity, l.arity, r.capacity, r.arity, out_cap)(
-        ls.data, rs.data, per, cum, lo, total)
-    return Relation(out, total), total
+def compact_core(data, mask, out_cap: int):
+    """Scatter masked rows to the front of a fresh (out_cap, ar) PAD block,
+    preserving their relative order (so sortedness survives compaction).
+    Rows beyond ``out_cap`` are dropped — callers detect that via
+    ``sum(mask) > out_cap``."""
+    pos = jnp.cumsum(mask) - 1
+    idx = jnp.where(mask, pos, out_cap)
+    out = jnp.full((out_cap + 1, data.shape[1]), PAD, jnp.int32)
+    out = out.at[idx].set(data, mode="drop")
+    return out[:out_cap]
 
 
-def cross(l: Relation, r: Relation):
-    """Cartesian product (rare in practice; needed for disconnected bodies)."""
-    if l.count == 0 or r.count == 0:
-        return Relation.empty(l.arity + r.arity), 0
-    total = l.count * r.count
-    out_cap = next_pow2(total)
-    li = jnp.repeat(jnp.arange(l.count), r.count, total_repeat_length=total)
-    ri = jnp.tile(jnp.arange(r.count), l.count)[:total]
-    out = jnp.full((out_cap, l.arity + r.arity), PAD, jnp.int32)
-    rows = jnp.concatenate([l.data[li], r.data[ri]], axis=1)
-    out = jax.lax.dynamic_update_slice(out, rows, (0, 0))
-    return Relation(out, total), total
+def project_core(data, cols):
+    """Column gather; invalid (PAD) rows stay fully PAD."""
+    valid = data[:, 0] != PAD
+    out = data[:, jnp.array(cols, jnp.int32)]
+    return jnp.where(valid[:, None], out, PAD)
 
 
-# ---------------------------------------------------------------------------
-# lexicographic binary search (shared by antijoin + merge_union)
-# ---------------------------------------------------------------------------
+def join_count_core(ldata, rdata_sorted, lkey: int, rkey: int):
+    """Count pass of the sort-merge join: per-left-row match ranges in the
+    right block (sorted by ``rkey``).  Returns (total, per, cum, lo)."""
+    lk = ldata[:, lkey]
+    rk = rdata_sorted[:, rkey]
+    lo = jnp.searchsorted(rk, lk, side="left")
+    hi = jnp.searchsorted(rk, lk, side="right")
+    per = jnp.where(lk != PAD, hi - lo, 0)
+    cum = jnp.cumsum(per) - per           # exclusive prefix
+    return jnp.sum(per), per, cum, lo
+
+
+def join_gather_core(ldata, rdata, per, cum, lo, total, out_cap: int):
+    """Materialize pass: emit [l cols..., r cols...] rows into a
+    (out_cap, lar+rar) block.  Rows past ``out_cap`` are dropped (overflow
+    is ``total > out_cap``, checked by the caller)."""
+    lcap = ldata.shape[0]
+    rcap = rdata.shape[0]
+    t = jnp.arange(out_cap)
+    # left row for output t: last i with cum[i] <= t
+    i = jnp.searchsorted(cum + per, t, side="right")
+    i = jnp.clip(i, 0, lcap - 1)
+    j = jnp.clip(lo[i] + (t - cum[i]), 0, rcap - 1)
+    valid = t < total
+    out = jnp.concatenate([ldata[i], rdata[j]], axis=1)
+    return jnp.where(valid[:, None], out, PAD)
+
+
 def _range_narrow(col, key, lo, hi):
     """Per-row binary search narrowing [lo,hi) to col==key (col sorted within
     each [lo,hi) range by lexsort invariant).  The step loop is a
@@ -343,15 +272,295 @@ def _range_narrow(col, key, lo, hi):
     return bs(False), bs(True)
 
 
+def pack_rows2(rows):
+    """Pack (cap, 2) non-negative int32 rows into one int64 key per row that
+    preserves lexicographic order (dictionary ids are non-negative and PAD =
+    int32 max, so packed PAD rows stay lex-maximal).  Turns the per-column
+    binary-search loops into single XLA-native sort/searchsorted calls for
+    the dominant arity-2 case.
+
+    Implemented as a bitcast (low word first — little-endian on CPU/GPU)
+    rather than shift-add: with the global x64 flag off, int64 *constants*
+    are canonicalized to int32 during lowering, but a constant-free bitcast
+    survives; ``enable_x64`` covers the trace-time aval creation."""
+    with jax.experimental.enable_x64():
+        pair = jnp.stack([rows[:, 1], rows[:, 0]], axis=1)
+        return jax.lax.bitcast_convert_type(pair, jnp.int64)
+
+
+def lex_range_core(hay_sorted, probe):
+    """Per-probe-row [lo, hi) occurrence range in a lexsorted haystack:
+    per-column range narrowing; when a column value is absent the range
+    collapses to the insertion point and stays there."""
+    lo = jnp.zeros(probe.shape[0], jnp.int32)
+    hi = jnp.full(probe.shape[0], hay_sorted.shape[0], jnp.int32)
+    for c in range(hay_sorted.shape[1]):
+        lo, hi = _range_narrow(hay_sorted[:, c], probe[:, c], lo, hi)
+    return lo, hi
+
+
+def _pack_ok() -> bool:
+    """int64 packing needs a backend with native 64-bit support."""
+    return jax.default_backend() != "tpu"
+
+
+def _lex_keys(hay, probe):
+    """Order-preserving scalar keys for rows of arity <= 2, else None."""
+    if hay.shape[1] == 1:
+        return hay[:, 0], probe[:, 0]
+    if hay.shape[1] == 2 and _pack_ok():
+        return pack_rows2(hay), pack_rows2(probe)
+    return None
+
+
 def _lex_searchsorted_left(hay, probe):
     """Leftmost insertion positions of each ``probe`` row in lexsorted
-    ``hay``: per-column range narrowing; when a column value is absent the
-    range collapses to the insertion point and stays there."""
-    lo = jnp.zeros(probe.shape[0], jnp.int32)
-    hi = jnp.full(probe.shape[0], hay.shape[0], jnp.int32)
-    for c in range(hay.shape[1]):
-        lo, hi = _range_narrow(hay[:, c], probe[:, c], lo, hi)
-    return lo
+    ``hay``."""
+    keys = _lex_keys(hay, probe)
+    if keys is not None:
+        with jax.experimental.enable_x64():
+            return jnp.searchsorted(keys[0], keys[1], side="left"
+                                    ).astype(jnp.int32)
+    return lex_range_core(hay, probe)[0]
+
+
+def member_mask_core(probe_rows, hay_sorted):
+    """Row membership of each probe row in a lexsorted haystack (PAD probe
+    rows report non-member: PAD columns never match valid haystack rows and
+    match only haystack PAD padding, which is excluded either way)."""
+    valid = probe_rows[:, 0] != PAD
+    keys = _lex_keys(hay_sorted, probe_rows)
+    if keys is not None:
+        hk, pk = keys
+        n = hk.shape[0]
+        # int64 stays confined to the key arrays: index math runs in int32
+        # so no int64 constants reach lowering (which would canonicalize
+        # them to int32 under the global x64-off flag)
+        with jax.experimental.enable_x64():
+            idx = jnp.searchsorted(hk, pk).astype(jnp.int32)
+            # no jnp.clip here: it is an internally-jitted helper whose
+            # cached trace clashes across x64 contexts
+            idx_c = jnp.minimum(jnp.maximum(idx, 0), n - 1)
+            found = hk[idx_c] == pk
+        found = jnp.logical_and(found, idx < n)
+        return jnp.logical_and(found, valid)
+    lo, hi = lex_range_core(hay_sorted, probe_rows)
+    return jnp.logical_and(hi > lo, valid)
+
+
+def anti_keep_core(data, hay_sorted, cols, pallas: bool | None = None):
+    """Keep-mask for the antijoin: valid rows of ``data`` whose ``cols``
+    tuple does NOT occur in the lexsorted haystack.  Single-column probes
+    route through the Pallas binary-search kernel when ``pallas``."""
+    if pallas is None:
+        pallas = use_pallas()
+    valid = data[:, 0] != PAD
+    if (pallas and hay_sorted.shape[1] == 1 and len(cols) == 1
+            and _is_pow2(data.shape[0]) and _is_pow2(hay_sorted.shape[0])):
+        K = _kernels()
+        found = K.probe_sorted(data[:, cols[0]], hay_sorted[:, 0]) != 0
+    else:
+        found = member_mask_core(project_core(data, cols), hay_sorted)
+    return jnp.logical_and(valid, jnp.logical_not(found))
+
+
+def merge_core(A, B, na, nb):
+    """Merge sorted block B (bcap rows, nb valid) into sorted block A
+    (out_cap rows, na valid); rows must be DISJOINT across the two blocks.
+    Only the B side is binary-searched — bcap probes, not out_cap — and the
+    A side's shifts are recovered from a histogram of the B insertion points
+    + cumsum (O(out_cap) streaming work): output slot of B[i] = i + p_i
+    where p_i = #{A lex< B[i]}, and output slot of A[j] = j + #{i : p_i <=
+    j}.  The output capacity is A's; overflow is ``na + nb > A.shape[0]``,
+    checked by the caller."""
+    out_cap, ar = A.shape
+    bcap = B.shape[0]
+    ia = jnp.arange(out_cap, dtype=jnp.int32)
+    ib = jnp.arange(bcap, dtype=jnp.int32)
+    valid_b = ib < nb
+    # insertion position of each B row in A; PAD rows are lex-max so p only
+    # counts valid A rows
+    p = _lex_searchsorted_left(A, B)
+    h = jnp.zeros(out_cap + 1, jnp.int32)
+    h = h.at[jnp.where(valid_b, p, out_cap)].add(1, mode="drop")
+    cnt = jnp.cumsum(h)[:out_cap]            # #{valid B rows lex< A[j]}
+    pos_a = jnp.where(ia < na, ia + cnt, out_cap)
+    pos_b = jnp.where(valid_b, ib + p, out_cap)
+    out = jnp.full((out_cap, ar), PAD, jnp.int32)
+    out = out.at[pos_a].set(A, mode="drop")
+    out = out.at[pos_b].set(B, mode="drop")
+    return out
+
+
+# ===========================================================================
+# two-phase host wrappers over the cores
+# ===========================================================================
+# ---------------------------------------------------------------------------
+# sorting / dedup
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _lexsort_fn(cap, ar, pallas):
+    @jax.jit
+    def f(data):
+        return lexsort_core(data, pallas=pallas)
+    return f
+
+
+def lexsort_rows(rel: Relation) -> Relation:
+    order = lex_order(rel.arity)
+    if sorted_store_enabled() and rel.sorted_by == order:
+        SORT_STATS.skipped += 1
+        return rel
+    data = _lexsort_fn(rel.capacity, rel.arity, use_pallas())(rel.data)
+    SORT_STATS.lexsort += 1
+    return Relation(data, rel.count, order)
+
+
+@lru_cache(maxsize=None)
+def _dedup_count_fn(cap, ar, pallas):
+    @jax.jit
+    def f(sorted_data):
+        mask = dedup_mask_core(sorted_data, pallas=pallas)
+        return jnp.sum(mask), mask
+    return f
+
+
+@lru_cache(maxsize=None)
+def _compact_fn(cap, ar, out_cap):
+    @jax.jit
+    def f(data, mask):
+        return compact_core(data, mask, out_cap)
+    return f
+
+
+def dedup(rel: Relation) -> Relation:
+    """Sort (skipped on a lexsorted input) + adjacent-unique + compact.
+    Output is lexsorted and marked."""
+    if rel.count == 0:
+        return Relation.empty(rel.arity)
+    s = lexsort_rows(rel)
+    n, mask = _dedup_count_fn(s.capacity, s.arity, use_pallas())(s.data)
+    n = int(n)
+    HOST_SYNC_STATS.count_pulls += 1
+    cap = next_pow2(n)
+    out = _compact_fn(s.capacity, s.arity, cap)(s.data, mask)
+    return Relation(out, n, lex_order(rel.arity))
+
+
+# ---------------------------------------------------------------------------
+# filters / projection
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _filter_count_fn(cap, ar, eq_pairs, const_pairs):
+    @jax.jit
+    def f(data):
+        valid = filter_mask_core(data, eq_pairs, const_pairs)
+        return jnp.sum(valid), valid
+    return f
+
+
+def filter_rows(rel: Relation, eq_pairs=(), const_pairs=()) -> Relation:
+    """Select rows with col equality (repeated vars) / constant constraints.
+    Compaction keeps row order, so the sortedness marker is preserved."""
+    if rel.count == 0 or (not eq_pairs and not const_pairs):
+        return rel
+    n, mask = _filter_count_fn(rel.capacity, rel.arity, tuple(eq_pairs),
+                               tuple(const_pairs))(rel.data)
+    n = int(n)
+    HOST_SYNC_STATS.count_pulls += 1
+    cap = next_pow2(n)
+    out = _compact_fn(rel.capacity, rel.arity, cap)(rel.data, mask)
+    return Relation(out, n, rel.sorted_by)
+
+
+@lru_cache(maxsize=None)
+def _project_fn(cap, ar, cols):
+    @jax.jit
+    def f(data):
+        return project_core(data, cols)
+    return f
+
+
+def project(rel: Relation, cols) -> Relation:
+    if not cols:
+        cols = (0,)
+    return Relation(_project_fn(rel.capacity, rel.arity, tuple(cols))(rel.data),
+                    rel.count)
+
+
+# ---------------------------------------------------------------------------
+# sort-merge join (single int32 key column; multi-column keys are packed by
+# the planner with post-join verification)
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _sortby_fn(cap, ar, key_col, pallas):
+    @jax.jit
+    def f(data):
+        return keysort_core(data, key_col, pallas=pallas)
+    return f
+
+
+def sort_by(rel: Relation, key_col: int) -> Relation:
+    """Sort by one key column; skipped when ``sorted_by`` already starts with
+    that column (a lexsorted relation is sorted by its primary column)."""
+    if (sorted_store_enabled() and rel.sorted_by
+            and rel.sorted_by[0] == key_col):
+        SORT_STATS.skipped += 1
+        return rel
+    data = _sortby_fn(rel.capacity, rel.arity, key_col,
+                      use_pallas())(rel.data)
+    SORT_STATS.key_sort += 1
+    return Relation(data, rel.count, (key_col,))
+
+
+@lru_cache(maxsize=None)
+def _join_count_fn(lcap, lar, rcap, rar, lkey, rkey):
+    @jax.jit
+    def f(l, r):
+        return join_count_core(l, r, lkey, rkey)
+    return f
+
+
+@lru_cache(maxsize=None)
+def _join_mat_fn(lcap, lar, rcap, rar, out_cap):
+    @jax.jit
+    def f(l, r, per, cum, lo, total):
+        return join_gather_core(l, r, per, cum, lo, total, out_cap)
+    return f
+
+
+def sm_join(l: Relation, r: Relation, lkey: int, rkey: int):
+    """Sort-merge join; returns (Relation out, matches) where out columns are
+    [l cols..., r cols...] and ``matches`` is the trigger count.  Input sorts
+    are skipped for relations already sorted by their join key."""
+    if l.count == 0 or r.count == 0:
+        return Relation.empty(l.arity + r.arity), 0
+    ls = sort_by(l, lkey)
+    rs = sort_by(r, rkey)
+    total, per, cum, lo = _join_count_fn(
+        l.capacity, l.arity, r.capacity, r.arity, lkey, rkey)(ls.data, rs.data)
+    total = int(total)
+    HOST_SYNC_STATS.count_pulls += 1
+    if total == 0:
+        return Relation.empty(l.arity + r.arity), 0
+    out_cap = next_pow2(total)
+    out = _join_mat_fn(l.capacity, l.arity, r.capacity, r.arity, out_cap)(
+        ls.data, rs.data, per, cum, lo, total)
+    return Relation(out, total), total
+
+
+def cross(l: Relation, r: Relation):
+    """Cartesian product (rare in practice; needed for disconnected bodies)."""
+    if l.count == 0 or r.count == 0:
+        return Relation.empty(l.arity + r.arity), 0
+    total = l.count * r.count
+    out_cap = next_pow2(total)
+    li = jnp.repeat(jnp.arange(l.count), r.count, total_repeat_length=total)
+    ri = jnp.tile(jnp.arange(r.count), l.count)[:total]
+    out = jnp.full((out_cap, l.arity + r.arity), PAD, jnp.int32)
+    rows = jnp.concatenate([l.data[li], r.data[ri]], axis=1)
+    out = jax.lax.dynamic_update_slice(out, rows, (0, 0))
+    return Relation(out, total), total
 
 
 # ---------------------------------------------------------------------------
@@ -359,31 +568,10 @@ def _lex_searchsorted_left(hay, probe):
 # in a sorted haystack relation
 # ---------------------------------------------------------------------------
 @lru_cache(maxsize=None)
-def _anti_count_fn(cap, ar, hcap, har, cols):
+def _anti_count_fn(cap, ar, hcap, har, cols, pallas):
     @jax.jit
     def f(data, hay_sorted):
-        probe = data[:, jnp.array(cols, jnp.int32)]
-        lo = jnp.zeros(probe.shape[0], jnp.int32)
-        hi = jnp.full(probe.shape[0], hay_sorted.shape[0], jnp.int32)
-        for c in range(har):
-            lo, hi = _range_narrow(hay_sorted[:, c], probe[:, c], lo, hi)
-        found = hi > lo
-        valid = data[:, 0] != PAD
-        keep = jnp.logical_and(valid, jnp.logical_not(found))
-        return jnp.sum(keep), keep
-    return f
-
-
-@lru_cache(maxsize=None)
-def _anti_count_pallas_fn(cap, ar, hcap, col):
-    """Single-key-column probe through the Pallas binary-search kernel."""
-    K = _kernels()
-
-    @jax.jit
-    def f(data, hay_sorted):
-        found = K.probe_sorted(data[:, col], hay_sorted[:, 0])
-        valid = data[:, 0] != PAD
-        keep = jnp.logical_and(valid, found == 0)
+        keep = anti_keep_core(data, hay_sorted, cols, pallas=pallas)
         return jnp.sum(keep), keep
     return f
 
@@ -400,14 +588,10 @@ def antijoin(rel: Relation, hay: Relation, cols=None) -> Relation:
     cols = tuple(cols) if cols is not None else tuple(range(rel.arity))
     assert len(cols) == hay.arity
     hs = lexsort_rows(hay)
-    if (use_pallas() and hay.arity == 1 and _is_pow2(rel.capacity)
-            and _is_pow2(hs.capacity)):
-        n, keep = _anti_count_pallas_fn(rel.capacity, rel.arity, hs.capacity,
-                                        cols[0])(rel.data, hs.data)
-    else:
-        n, keep = _anti_count_fn(rel.capacity, rel.arity, hs.capacity,
-                                 hay.arity, cols)(rel.data, hs.data)
+    n, keep = _anti_count_fn(rel.capacity, rel.arity, hs.capacity,
+                             hay.arity, cols, use_pallas())(rel.data, hs.data)
     n = int(n)
+    HOST_SYNC_STATS.count_pulls += 1
     if n == rel.count:
         return rel
     cap = next_pow2(n)
@@ -434,9 +618,9 @@ def union(a: Relation, b: Relation, dedupe: bool = True) -> Relation:
     return dedup(out) if dedupe else out
 
 
-def _fit_rows(data, out_cap):
+def fit_rows(data, out_cap):
     """Slice or PAD-extend to ``out_cap`` rows (rows >= count are PAD either
-    way) so the merge jit cache keys on the output bucket, not the store's."""
+    way) so jit caches key on the planned output bucket, not the input's."""
     cap = data.shape[0]
     if cap == out_cap:
         return data
@@ -448,31 +632,9 @@ def _fit_rows(data, out_cap):
 
 @lru_cache(maxsize=None)
 def _merge_fn(cap, bcap, ar):
-    """Merge small sorted delta B (bcap rows) into sorted store A (padded to
-    the output bucket ``cap``).  Only the delta side is binary-searched —
-    bcap probes, not cap — and the store side's shifts are recovered from a
-    histogram of the delta insertion points + cumsum (O(cap) streaming work):
-    output slot of B[i] = i + p_i where p_i = #{A lex< B[i]}, and output slot
-    of A[j] = j + #{i : p_i <= j}."""
-    out_cap = cap
-
     @jax.jit
     def f(A, B, na, nb):
-        ia = jnp.arange(cap, dtype=jnp.int32)
-        ib = jnp.arange(bcap, dtype=jnp.int32)
-        valid_b = ib < nb
-        # insertion position of each delta row in the store; PAD rows are
-        # lex-max so p only counts valid store rows
-        p = _lex_searchsorted_left(A, B)
-        h = jnp.zeros(cap + 1, jnp.int32)
-        h = h.at[jnp.where(valid_b, p, cap)].add(1, mode="drop")
-        cnt = jnp.cumsum(h)[:cap]            # #{valid delta rows lex< A[j]}
-        pos_a = jnp.where(ia < na, ia + cnt, out_cap)
-        pos_b = jnp.where(valid_b, ib + p, out_cap)
-        out = jnp.full((out_cap, ar), PAD, jnp.int32)
-        out = out.at[pos_a].set(A, mode="drop")
-        out = out.at[pos_b].set(B, mode="drop")
-        return out
+        return merge_core(A, B, na, nb)
     return f
 
 
@@ -494,6 +656,6 @@ def merge_union(a: Relation, b: Relation) -> Relation:
     n = a.count + b.count
     out_cap = next_pow2(n)
     out = _merge_fn(out_cap, b.capacity, a.arity)(
-        _fit_rows(a.data, out_cap), b.data, a.count, b.count)
+        fit_rows(a.data, out_cap), b.data, a.count, b.count)
     SORT_STATS.merges += 1
     return Relation(out, n, lex_order(a.arity))

@@ -4,14 +4,20 @@ On CPU (this container) the kernels execute with ``interpret=True`` — the
 kernel bodies run through the Pallas interpreter for correctness validation.
 On TPU set ``INTERPRET = False`` (the launch scripts do this when
 ``jax.default_backend() == 'tpu'``).
+
+Edge shapes: the engine always calls these on pow-2 capacity buckets, but
+the wrappers normalize everything else — empty inputs return immediately,
+non-pow-2 sort lengths are padded to the next power of two with key-space
+maxima (which sort behind every real key, including PAD sentinels that tie
+with them) and sliced back, and tiles are clamped to pow-2 divisors of the
+padded length.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.engine.relation import PAD, next_pow2
 from repro.kernels import bitonic_sort as BS
 from repro.kernels import hash_probe as HP
 from repro.kernels import unique_mask as UM
@@ -19,32 +25,83 @@ from repro.kernels import unique_mask as UM
 INTERPRET = jax.default_backend() != "tpu"
 
 
+def _pow2_tile(tile: int, n: int) -> int:
+    """Largest pow-2 tile <= min(tile, n); n must itself be pow-2."""
+    t = max(1, min(tile, n))
+    return 1 << (t.bit_length() - 1)
+
+
 def sort_with_payload(keys, vals, tile: int = 1024):
-    """Full sort of (n,) int32 keys + payload: tile-sort kernel + log-depth
-    pairwise bitonic merge kernels."""
+    """Full sort of (n,) int32/uint32 keys + payload: tile-sort kernel +
+    log-depth pairwise bitonic merge kernels.  Non-pow-2 lengths are padded
+    with the key dtype's max; because real keys may equal that sentinel (the
+    engine's PAD) and the bitonic network is unstable, the network sorts
+    POSITIONS as its payload there — synthetic positions (>= n) are
+    compacted out afterwards and the caller's payload gathered back, so the
+    returned payload is always a permutation of the caller's, whatever its
+    values."""
     n = keys.shape[0]
-    assert n % tile == 0 and (n & (n - 1)) == 0
-    keys, vals = BS.bitonic_sort_tiles(keys, vals, min(tile, n),
-                                       interpret=INTERPRET)
-    width = tile * 2
-    while width <= n:
+    if n == 0:
+        return keys, vals
+    m = next_pow2(n)
+    t = _pow2_tile(tile, m)
+    if m != n:
+        sentinel = jnp.iinfo(keys.dtype).max
+        keys_p = jnp.concatenate(
+            [keys, jnp.full((m - n,), sentinel, keys.dtype)])
+        pos = jnp.arange(m, dtype=jnp.int32)
+        keys_p, pos = BS.bitonic_sort_tiles(keys_p, pos, t,
+                                            interpret=INTERPRET)
+        width = t * 2
+        while width <= m:
+            keys_p, pos = BS.bitonic_merge_pairs(keys_p, pos, width,
+                                                 interpret=INTERPRET)
+            width *= 2
+        # drop the synthetic entries (position >= n), keeping sorted order:
+        # they only interleave with real entries inside the sentinel-key tie
+        # group, so an order-preserving compaction is still sorted by key
+        keep = pos < n
+        slot = jnp.where(keep, jnp.cumsum(keep) - 1, n)
+        ks = jnp.zeros((n + 1,), keys.dtype).at[slot].set(keys_p,
+                                                          mode="drop")
+        perm = jnp.zeros((n + 1,), jnp.int32).at[slot].set(pos, mode="drop")
+        return ks[:n], vals[perm[:n]]
+    keys, vals = BS.bitonic_sort_tiles(keys, vals, t, interpret=INTERPRET)
+    width = t * 2
+    while width <= m:
         keys, vals = BS.bitonic_merge_pairs(keys, vals, width,
                                             interpret=INTERPRET)
         width *= 2
     return keys, vals
 
 
+def _pad_to_tile(n: int, tile: int):
+    """(pow-2 tile, padded length that the tile divides)."""
+    t = _pow2_tile(tile, n)
+    return t, ((n + t - 1) // t) * t
+
+
 def unique_mask(data, tile: int = 1024):
     n = data.shape[0]
-    t = min(tile, n)
-    while n % t:
-        t //= 2
-    return UM.unique_mask(data, tile=t, interpret=INTERPRET)
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    t, m = _pad_to_tile(n, tile)
+    if m != n:
+        # pad with PAD rows: they are masked out by the kernel and sliced off
+        data = jnp.concatenate(
+            [data, jnp.full((m - n, data.shape[1]), PAD, data.dtype)])
+    return UM.unique_mask(data, tile=t, interpret=INTERPRET)[:n]
 
 
 def probe_sorted(queries, hay_sorted, tile: int = 1024):
     n = queries.shape[0]
-    t = min(tile, n)
-    while n % t:
-        t //= 2
-    return HP.probe_sorted(queries, hay_sorted, tile=t, interpret=INTERPRET)
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if hay_sorted.shape[0] == 0:
+        return jnp.zeros((n,), jnp.int32)
+    t, m = _pad_to_tile(n, tile)
+    if m != n:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((m - n,), queries.dtype)])
+    return HP.probe_sorted(queries, hay_sorted, tile=t,
+                           interpret=INTERPRET)[:n]

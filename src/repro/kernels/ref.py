@@ -7,6 +7,13 @@ import jax.numpy as jnp
 from repro.engine.relation import PAD
 
 
+def sort_with_payload_ref(keys, vals):
+    """Full-sort oracle matching ``kernels.ops.sort_with_payload``: sorted
+    keys plus a payload permutation consistent with them."""
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
 def sort_tiles_ref(keys, vals, tile: int):
     n = keys.shape[0]
     kk = keys.reshape(n // tile, tile)

@@ -1,0 +1,169 @@
+"""Cross-engine differential suite — the oracle gating the fused refactor.
+
+Asserts ``decode_facts()`` parity across every execution tier on randomly
+generated programs + bases:
+
+* symbolic ``chase`` (ground truth),
+* two-phase engine: ``seminaive`` / ``tg`` / ``tg_noopt``,
+* ``tg_linear`` over a precomputed ``tglinear``/``minLinear`` EG,
+* the fused round executor (``REPRO_FUSED=1``),
+
+under both kernel dispatch paths (``REPRO_USE_PALLAS=0/1``).
+
+Programs are drawn two ways: seeded numpy generators that always run
+(deterministic everywhere), plus hypothesis-driven cases when hypothesis is
+installed (the CI dev extra).
+"""
+import numpy as np
+import pytest
+
+from repro.core.chase import chase
+from repro.core.terms import Atom, Program, Rule, Var
+from repro.core.tg_linear import min_linear, tglinear
+from repro.engine.materialize import EngineKB, materialize
+
+X, Y, Z = Var("X"), Var("Y"), Var("Z")
+MAX_ROUNDS = 60
+
+
+# ---------------------------------------------------------------------------
+# seeded generators (mirror the hypothesis strategies in test_property)
+# ---------------------------------------------------------------------------
+def random_datalog(rng) -> Program:
+    edb, idb = ["e", "f"], ["P", "Q", "R"]
+    pool = [X, Y, Z]
+    rules = [Rule((Atom("e", (X, Y)),),
+                  Atom(str(rng.choice(idb)), (X, Y)), "seed")]
+    for i in range(int(rng.integers(2, 6))):
+        body = []
+        for _ in range(int(rng.integers(1, 3))):
+            p = str(rng.choice(edb + idb))
+            body.append(Atom(p, (pool[rng.integers(0, 3)],
+                                 pool[rng.integers(0, 3)])))
+        head_vars = [v for a in body for v in a.args]
+        h1 = head_vars[rng.integers(0, len(head_vars))]
+        h2 = head_vars[rng.integers(0, len(head_vars))]
+        rules.append(Rule(tuple(body),
+                          Atom(str(rng.choice(idb)), (h1, h2)), f"g{i}"))
+    return Program(rules)
+
+
+def random_linear(rng) -> Program:
+    idb = ["P", "Q", "R"]
+    arg_pool = [(X, Y), (Y, X), (X, X)]
+    head_pool = arg_pool + [(Y, Y)]
+    rules = [Rule((Atom("e", (X, Y)),),
+                  Atom(str(rng.choice(idb)), arg_pool[rng.integers(0, 3)]),
+                  "seed")]
+    for i in range(int(rng.integers(1, 5))):
+        b_args = arg_pool[rng.integers(0, 3)]
+        h_args = head_pool[rng.integers(0, 4)]
+        if not {t for t in h_args} <= {t for t in b_args}:
+            continue
+        rules.append(Rule((Atom(str(rng.choice(idb)), b_args),),
+                          Atom(str(rng.choice(idb)), h_args), f"g{i}"))
+    return Program(rules)
+
+
+def random_base(rng, preds=("e", "f")):
+    consts = [f"c{i}" for i in range(int(rng.integers(2, 5)))]
+    facts = set()
+    for _ in range(int(rng.integers(1, 9))):
+        facts.add(Atom(str(rng.choice(list(preds))),
+                       (str(rng.choice(consts)), str(rng.choice(consts)))))
+    return sorted(facts, key=repr)
+
+
+# ---------------------------------------------------------------------------
+# the oracle
+# ---------------------------------------------------------------------------
+def assert_all_engines_agree(P, B, monkeypatch, linear: bool = False):
+    """Every engine tier × flag combination must reproduce the chase."""
+    ch = chase(P, B, max_rounds=MAX_ROUNDS)
+    if not ch.terminated:
+        return
+    expected = set(ch.facts) | set(B)
+    eg = min_linear(tglinear(P)) if linear else None
+    for pallas in ("0", "1"):
+        monkeypatch.setenv("REPRO_USE_PALLAS", pallas)
+        for fused in ("0", "1"):
+            monkeypatch.setenv("REPRO_FUSED", fused)
+            for mode in ("seminaive", "tg", "tg_noopt"):
+                kb = EngineKB(P, B)
+                materialize(kb, mode=mode, max_rounds=MAX_ROUNDS)
+                assert kb.decode_facts() == expected, (
+                    f"mode={mode} pallas={pallas} fused={fused}\n{P}")
+        if eg is not None:       # tg_linear has no fused variant
+            for cleaning in (True, False):
+                kb = EngineKB(P, B)
+                materialize(kb, mode="tg_linear", tg_eg=eg,
+                            cleaning=cleaning)
+                assert kb.decode_facts() == expected, (
+                    f"tg_linear cleaning={cleaning} pallas={pallas}\n{P}")
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_differential_datalog(seed, monkeypatch):
+    rng = np.random.default_rng(1000 + seed)
+    P = random_datalog(rng)
+    B = random_base(rng)
+    assert_all_engines_agree(P, B, monkeypatch)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_differential_linear(seed, monkeypatch):
+    rng = np.random.default_rng(2000 + seed)
+    P = random_linear(rng)
+    B = [f for f in random_base(rng, preds=("e",))]
+    if not B:
+        return
+    assert_all_engines_agree(P, B, monkeypatch, linear=True)
+
+
+def test_differential_transitive_closure(monkeypatch):
+    """Deep fixpoint (the fused while_loop path) on both TC orientations."""
+    from repro.core.terms import parse_atom, parse_program
+    rng = np.random.default_rng(7)
+    edges = ([(i, i + 1) for i in range(20)]
+             + [tuple(e) for e in rng.integers(0, 20, (10, 2))])
+    B = [parse_atom(f"e(v{a}, v{b})") for a, b in edges]
+    for text in ("e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)",
+                 "e(X, Y) -> T(Y, X)\nT(Y, X) & e(Y, Z) -> T(Z, X)"):
+        assert_all_engines_agree(parse_program(text), B, monkeypatch)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven cases (runs when the CI dev extra is installed)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # pragma: no cover - exercised in slim containers
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(deadline=None, max_examples=10,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+    @st.composite
+    def seeded_case(draw):
+        seed = draw(st.integers(0, 2 ** 16))
+        return np.random.default_rng(seed)
+
+    @given(seeded_case())
+    @settings(**SETTINGS)
+    def test_differential_datalog_hypothesis(rng):
+        P = random_datalog(rng)
+        B = random_base(rng)
+        with pytest.MonkeyPatch.context() as mp:
+            assert_all_engines_agree(P, B, mp)
+
+    @given(seeded_case())
+    @settings(**SETTINGS)
+    def test_differential_linear_hypothesis(rng):
+        P = random_linear(rng)
+        B = random_base(rng, preds=("e",))
+        if not B:
+            return
+        with pytest.MonkeyPatch.context() as mp:
+            assert_all_engines_agree(P, B, mp, linear=True)

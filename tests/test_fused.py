@@ -1,0 +1,140 @@
+"""Fused round executor: host-sync accounting, capacity-overflow retry,
+linear-tail while_loop behavior, and store-invariant preservation."""
+import numpy as np
+import pytest
+
+from repro.core.terms import parse_atom, parse_program
+from repro.engine import fused, ops
+from repro.engine.materialize import EngineKB, materialize
+from repro.engine.relation import lex_order
+
+TC = parse_program("""
+    e(X, Y) -> T(X, Y)
+    T(X, Y) & e(Y, Z) -> T(X, Z)
+""")
+
+
+def _chain(n, extra=0, seed=0):
+    rng = np.random.default_rng(seed)
+    edges = [(i, i + 1) for i in range(n)]
+    edges += [tuple(e) for e in rng.integers(0, n, (extra, 2))]
+    return [parse_atom(f"e(v{a}, v{b})") for a, b in edges]
+
+
+@pytest.mark.parametrize("mode", ["tg", "tg_noopt"])
+def test_fused_matches_two_phase(mode, monkeypatch):
+    B = _chain(24, extra=16, seed=3)
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    kb1 = EngineKB(TC, B)
+    st1 = materialize(kb1, mode=mode)
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb2 = EngineKB(TC, B)
+    st2 = materialize(kb2, mode=mode)
+    assert st2.extra.get("fused") is True
+    assert kb1.decode_facts() == kb2.decode_facts()
+    assert (st1.rounds, st1.triggers, st1.derived) == \
+        (st2.rounds, st2.triggers, st2.derived)
+
+
+def test_fused_host_sync_reduction(monkeypatch):
+    """The deep-chain fixpoint must collapse hundreds of per-primitive
+    host pulls into a handful of per-round / per-fixpoint pulls."""
+    B = _chain(48)
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    ops.HOST_SYNC_STATS.reset()
+    kb1 = EngineKB(TC, B)
+    st1 = materialize(kb1, mode="tg")
+    unfused_pulls = ops.HOST_SYNC_STATS.total()
+
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    ops.HOST_SYNC_STATS.reset()
+    kb2 = EngineKB(TC, B)
+    st2 = materialize(kb2, mode="tg")
+    fused_pulls = ops.HOST_SYNC_STATS.total()
+
+    assert kb1.decode_facts() == kb2.decode_facts()
+    assert st1.rounds == st2.rounds > 40
+    # the whole linear tail ran inside lax.while_loop: far fewer pulls than
+    # rounds, and >=5x below the two-phase executor
+    assert fused_pulls < st2.rounds
+    assert fused_pulls * 5 <= unfused_pulls
+
+
+def test_fused_overflow_retry_exactly_once(monkeypatch):
+    """A join whose output exceeds the planned capacity triggers exactly one
+    recompile-and-retry (capacity doubling) and identical facts."""
+    B = _chain(60)
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    kb_ref = EngineKB(TC, B)
+    materialize(kb_ref, mode="tg")
+
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb_warm = EngineKB(TC, B)
+    materialize(kb_warm, mode="tg")   # converge store/delta capacity memo
+
+    # plant a join plan one doubling short of what this instance needs: the
+    # chain's biggest join emits 59 rows, so a 32-row bucket overflows once
+    def small_join_cap(self, plan, idx):
+        key = (plan.key, idx)
+        if key not in self.join:
+            self.join[key] = 32
+        return self.join[key]
+    monkeypatch.setattr(fused._Caps, "join_cap", small_join_cap)
+
+    ops.HOST_SYNC_STATS.reset()
+    kb = EngineKB(TC, B)
+    st = materialize(kb, mode="tg")
+    assert st.extra.get("fused") is True
+    assert ops.HOST_SYNC_STATS.fused_retries == 1
+    assert kb.decode_facts() == kb_ref.decode_facts()
+
+
+def test_fused_store_invariant(monkeypatch):
+    """Fused stores come back lexsorted, compacted, and set-semantic."""
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb = EngineKB(TC, _chain(20, extra=12, seed=5))
+    materialize(kb, mode="tg")
+    for pred, rel in kb.rels.items():
+        assert rel.sorted_by == lex_order(rel.arity), pred
+        rows = rel.np_rows()
+        order = np.lexsort(rows.T[::-1])
+        assert (order == np.arange(len(rows))).all(), pred
+        assert len(rel.rows_set()) == rel.count, pred
+
+
+def test_fused_capacity_memo_warm_start(monkeypatch):
+    """A warmed program plans right first try: zero retries on rerun."""
+    B = _chain(30, extra=8, seed=9)
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb = EngineKB(TC, B)
+    materialize(kb, mode="tg")
+    ops.HOST_SYNC_STATS.reset()
+    kb2 = EngineKB(TC, B)
+    materialize(kb2, mode="tg")
+    assert ops.HOST_SYNC_STATS.fused_retries == 0
+
+
+def test_fused_falls_back_outside_fragment(monkeypatch):
+    """Existential rules are outside the fused fragment: same facts, no
+    fused flag."""
+    P = parse_program("""
+        p(X, Y) -> Q(X, Y)
+        Q(X, Y) & Q(Y, Z) -> exists W. Q(Z, W)
+    """)
+    B = [parse_atom("p(a, b)"), parse_atom("p(b, c)")]
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    kb1 = EngineKB(P, B)
+    materialize(kb1, mode="tg", max_rounds=5)
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb2 = EngineKB(P, B)
+    st2 = materialize(kb2, mode="tg", max_rounds=5)
+    assert st2.extra.get("fused") is None
+    assert kb1.decode_facts() == kb2.decode_facts()
+
+
+def test_seminaive_never_fused(monkeypatch):
+    """Per-rule filtering semantics stay on the two-phase path."""
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb = EngineKB(TC, _chain(10))
+    st = materialize(kb, mode="seminaive")
+    assert st.extra.get("fused") is None
