@@ -1,0 +1,97 @@
+"""Distributed-executor scaling table — the trajectory behind
+``BENCH_dist.json``.
+
+Runs TC (deep chain + chords) and LUBM-L through the sharded shard_map
+executor at ndev in {1, 2, 4, 8} (smoke: {1, 2}).  Each shard count runs in
+a subprocess (``xla_force_host_platform_device_count`` is locked at first
+jax init, so the parent process can't revisit it), warms once so the
+capacity planner converges, then times a steady-state run.
+
+Reported per row: wall time, derived/total facts, rounds, triggers, the
+single-device ``tg`` reference fact count (``parity`` must be 1), and the
+host-sync counters — ``pulls_per_round`` is the acceptance metric: ONE
+blocking convergence pull per round attempt, independent of ndev.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import sys, json, time
+    sys.path.insert(0, %(src)r)
+    from repro.core.terms import parse_atom, parse_program
+    from repro.data.kb_sources import LUBM_L, lubm_facts
+    from repro.engine import ops
+    from repro.engine.materialize import EngineKB, materialize
+
+    smoke = %(smoke)r
+    TC = parse_program("e(X, Y) -> T(X, Y)\\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    n_chain = 48 if smoke else 128
+    B_tc = [parse_atom(f"e(v{i}, v{i+1})") for i in range(n_chain)] + \\
+        [parse_atom(f"e(v{3*i+2}, v{i})") for i in range(n_chain // 8)]
+    scens = [("tc", TC, B_tc),
+             ("LUBM-L", LUBM_L, lubm_facts(n_univ=1 if smoke else 2))]
+    out = []
+    for name, P, B in scens:
+        ref = EngineKB(P, B)
+        materialize(ref, mode="tg")
+        # warm TWICE: the first pass converges the capacity planner, the
+        # second compiles every round at the converged buckets — the timed
+        # run then measures steady state (same discipline as bench_fused)
+        for _ in range(2):
+            kb = EngineKB(P, B)
+            materialize(kb, mode="tg", backend="dist")
+        ops.HOST_SYNC_STATS.reset()
+        kb = EngineKB(P, B)
+        t0 = time.perf_counter()
+        st = materialize(kb, mode="tg", backend="dist")
+        t = time.perf_counter() - t0
+        out.append({
+            "name": name, "seconds": t, "ndev": st.extra["ndev"],
+            "derived": st.derived, "facts": kb.num_facts(),
+            "rounds": st.rounds, "triggers": st.triggers,
+            "facts_ref": ref.num_facts(),
+            "parity": int(kb.num_facts() == ref.num_facts()),
+            "dist_pulls": ops.HOST_SYNC_STATS.dist_pulls,
+            "dist_retries": ops.HOST_SYNC_STATS.dist_retries})
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def run(smoke: bool = False):
+    scales = (1, 2) if smoke else (1, 2, 4, 8)
+    for ndev in scales:
+        script = _SCRIPT % {"ndev": ndev, "src": _SRC, "smoke": smoke}
+        r = subprocess.run([sys.executable, "-c", script],
+                           capture_output=True, text=True, timeout=3600)
+        if r.returncode != 0:
+            raise RuntimeError(f"dist bench subprocess ndev={ndev} failed:\n"
+                               + r.stderr[-3000:])
+        line = [ln for ln in r.stdout.splitlines()
+                if ln.startswith("RESULT ")][-1]
+        for rec in json.loads(line[len("RESULT "):]):
+            emit(f"dist.{rec['name']}.ndev{ndev}", rec["seconds"],
+                 rec["derived"],
+                 ndev=rec["ndev"], facts=rec["facts"],
+                 facts_ref=rec["facts_ref"], parity=rec["parity"],
+                 rounds=rec["rounds"], triggers=rec["triggers"],
+                 dist_pulls=rec["dist_pulls"],
+                 dist_retries=rec["dist_retries"],
+                 pulls_per_round=round(rec["dist_pulls"]
+                                       / max(rec["rounds"], 1), 3))
+
+
+if __name__ == "__main__":
+    import benchmarks.common  # noqa: F401  (sys.path side effect)
+    run(smoke="--smoke" in sys.argv)

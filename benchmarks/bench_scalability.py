@@ -23,10 +23,12 @@ def run(smoke: bool = False):
         kb = EngineKB(LUBM_L, B)
         st, t = timed(materialize, kb, mode="tg")
         total = kb.num_facts()
+        # numbers, not preformatted strings: BENCH_*.json consumers plot
+        # these fields directly
         emit(f"scalability.LUBM-L.univ{n_univ}", t, st.derived,
              base=len(B), total=total,
-             facts_per_s=f"{st.derived / max(t, 1e-9):.0f}",
-             mem_mb=f"{peak_rss_mb():.0f}")
+             facts_per_s=round(st.derived / max(t, 1e-9)),
+             mem_mb=round(peak_rss_mb(), 1))
 
 
 if __name__ == "__main__":

@@ -23,9 +23,9 @@ import os
 import platform
 import sys
 
-from benchmarks import (bench_chasebench, bench_datalog, bench_fused,
-                        bench_linear, bench_rdfs, bench_scalability,
-                        bench_triggers)
+from benchmarks import (bench_chasebench, bench_datalog, bench_dist,
+                        bench_fused, bench_linear, bench_rdfs,
+                        bench_scalability, bench_triggers)
 from benchmarks import common
 
 TABLES = {
@@ -36,6 +36,7 @@ TABLES = {
     "rdfs": bench_rdfs.run,              # paper Table 6
     "scalability": bench_scalability.run,  # paper Table 7
     "tc": bench_fused.run,               # fused vs two-phase host syncs
+    "dist": bench_dist.run,              # sharded executor scaling (ndev)
 }
 
 
@@ -78,6 +79,12 @@ def main() -> None:
                       else "BENCH_tc.json",
                       [r for r in common.RESULTS
                        if r["name"].startswith("tc.")])
+    if "dist" in which:
+        # same convention for the distributed-executor scaling trajectory
+        write_payload("BENCH_dist_smoke.json" if args.smoke
+                      else "BENCH_dist.json",
+                      [r for r in common.RESULTS
+                       if r["name"].startswith("dist.")])
 
 
 if __name__ == "__main__":

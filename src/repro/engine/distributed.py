@@ -1,25 +1,57 @@
-"""Distributed TG-guided materialization (beyond-paper: the paper lists
-distributed KBs as future work).
+"""Distributed materialization: a ``shard_map`` executor over the shared
+rule-plan IR (beyond-paper: the paper lists distributed KBs as future work).
 
-Facts are hash-partitioned across the ``data`` mesh axis.  Each semi-naive /
-TG round:
+This is the third physical executor over ``repro.engine.plan``'s
+:class:`RulePlan` IR — the same plans the fused single-device executor
+compiles, run over hash-partitioned shards.  It handles *arbitrary* Datalog
+programs in the plannable fragment (no existentials, connected bodies), not
+just the hand-written transitive closure the first version shipped with.
 
-  1. re-partition the delta by the join key (fixed-capacity bucket exchange
-     via ``all_to_all``),
-  2. local sort-merge join against the co-partitioned EDB,
-  3. re-partition derivations by full-tuple hash (so duplicates land on the
-     same shard), local dedup + antijoin against the local store,
-  4. global convergence via ``psum`` of per-shard delta counts.
+Data model (:class:`ShardedKB` state, kept as device arrays between
+rounds): every predicate's store is partitioned across the mesh ``axis`` by
+the full-tuple hash — the canonical home of a fact is the shard its hash
+picks, which makes dedup and the antijoin against the store purely local —
+and each shard keeps its rows lexsorted (the same ``Relation.sorted_by``
+store invariant as the single-device engine, so the shared ops cores skip
+their sort passes on store inputs).
 
-Everything is shape-stable (static per-shard capacities), so the whole
-multi-round loop lowers to a single XLA program (``lax.while_loop``) that the
-multi-pod dry-run compiles for the production mesh.
+Each semi-naive / TG round compiles to ONE ``shard_map`` program (cached by
+its static signature) that:
 
-The join / dedup / membership / compaction inner loops are the traceable
-cores from ``repro.engine.ops`` — the same code the single-device two-phase
-wrappers and the fused round executor run — so both execution tiers share
-one compiled-round architecture.  Pallas routing is pinned off here: the
-kernels are not shard_map-transformable in interpret mode.
+  1. walks every active ``(rule plan, delta position)`` with the shared
+     chain walker ``_exec_rule_traced``, passing a ``route`` hook that
+     re-partitions rows by join key before each join side (and by projected
+     head-tuple hash before the Def. 23 antijoin pre-restriction) via the
+     fixed-capacity bucket ``_exchange`` (``all_to_all``),
+  2. re-partitions each predicate's derivations by full-tuple hash so
+     duplicates land on one shard, then runs the shared ``_absorb_traced``
+     (lexsort + dedup + antijoin vs the local store shard + incremental
+     sorted merge) locally,
+  3. reduces convergence scalars with ``psum``: per-pred fresh-fact totals,
+     the trigger total, and the overflow vector.
+
+The host pulls exactly one scalar bundle per round
+(``HOST_SYNC_STATS.dist_pulls``) regardless of the shard count — the
+per-round host-sync cost is independent of ``ndev``.  Overflow follows the
+planner contract from ``repro.engine.plan``: every planned capacity (store /
+delta / join / exchange bucket, all per shard) carries an in-program flag;
+when any fires the round's outputs are discarded, the host doubles exactly
+the overflowed buckets, recompiles, and retries the same round
+(``HOST_SYNC_STATS.dist_retries``).
+
+Known trade-off: the route hook re-exchanges BOTH sides of every join each
+round, including round-invariant store sides — correctness-first; a future
+PR can cache per-(pred, join-col) routed copies of static inputs so only
+deltas move (the architecture this module exists to enable).
+
+Pallas routing is pinned off here: the kernels are not shard_map-
+transformable in interpret mode.
+
+Entry points: ``materialize(kb, mode="tg", backend="dist")`` (or
+``REPRO_DIST=1``) routes through :func:`materialize_distributed`, falling
+back to the fused / two-phase executors for programs outside the fragment;
+``run_distributed_tc`` is the back-compat TC wrapper; ``lower_distributed_tc``
+lowers one TC round on a target mesh for the multi-pod dry-run.
 """
 from __future__ import annotations
 
@@ -31,32 +63,65 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.engine.ops import (compact_core, dedup_mask_core, join_count_core,
-                              join_gather_core, keysort_core, lexsort_core,
-                              member_mask_core, project_core)
-from repro.engine.relation import PAD
+from repro.engine import ops
+from repro.engine.plan import (_MAX_RETRIES, _absorb_traced, _cached_program,
+                               _Caps, _exec_rule_traced, compile_rule_plan,
+                               program_fingerprint)
+from repro.engine.relation import PAD, Relation, lex_order
+
+_NP_PAD = np.iinfo(np.int32).max
 
 
+# ---------------------------------------------------------------------------
+# hashing (device + host mirrors must agree: initial placement partitions on
+# the host with the same function the exchanges use on device)
+# ---------------------------------------------------------------------------
 def _hash32(x):
     """Cheap int32 mix (Wang hash variant, stays in int32)."""
     x = x.astype(jnp.uint32)
-    x = (x ^ (x >> 16)) * jnp.uint32(0x7feb352d)
-    x = (x ^ (x >> 15)) * jnp.uint32(0x846ca68b)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
     return (x ^ (x >> 16)).astype(jnp.uint32)
 
 
-def _tuple_hash(rows):
-    h = jnp.uint32(0x9e3779b9)
-    for c in range(rows.shape[1]):
+def _cols_hash(rows, cols):
+    """Combined hash of the given columns of each row (uint32)."""
+    h = jnp.uint32(0x9E3779B9)
+    for c in cols:
         h = _hash32(rows[:, c].astype(jnp.uint32) + h)
     return h
 
 
-def _exchange(rows, target, ndev, axis, bucket_cap):
-    """Fixed-capacity bucket exchange: rows (cap, ar) with target shard ids;
-    rows routed via all_to_all; returns ((ndev*bucket_cap, ar) local rows,
-    dropped_count) — overflowed rows are counted, so the driver can retry
-    with bigger buckets."""
+def _tuple_hash(rows):
+    return _cols_hash(rows, range(rows.shape[1]))
+
+
+def _np_hash32(x):
+    x = x.astype(np.uint32)
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def np_tuple_hash(rows: np.ndarray) -> np.ndarray:
+    """Host mirror of ``_tuple_hash`` for the initial placement."""
+    h = np.uint32(0x9E3779B9)
+    out = np.full(rows.shape[0], h, np.uint32)
+    for c in range(rows.shape[1]):
+        out = _np_hash32(rows[:, c].astype(np.uint32) + out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixed-capacity bucket exchange
+# ---------------------------------------------------------------------------
+def _route_to_buckets(rows, target, ndev, bucket_cap):
+    """Pure bucketization half of ``_exchange`` (property-tested on its
+    own): scatter rows into per-destination buckets of ``bucket_cap`` rows,
+    preserving input order within each bucket (``argsort`` is stable).
+    Invalid (PAD) rows are discarded; valid rows beyond a destination's
+    capacity are counted.  Returns ((ndev, bucket_cap, ar) buckets,
+    overflow_count)."""
     cap, ar = rows.shape
     valid = rows[:, 0] != PAD
     target = jnp.where(valid, target, ndev)          # invalid -> trash bucket
@@ -71,14 +136,25 @@ def _exchange(rows, target, ndev, axis, bucket_cap):
     buckets = jnp.full((ndev * bucket_cap + 1, ar), PAD, jnp.int32)
     buckets = buckets.at[slot].set(jnp.where((t_sorted < ndev)[:, None],
                                              rows_sorted, PAD), mode="drop")
-    buckets = buckets[:ndev * bucket_cap].reshape(ndev, bucket_cap, ar)
+    return (buckets[:ndev * bucket_cap].reshape(ndev, bucket_cap, ar),
+            jnp.sum(overflow))
+
+
+def _exchange(rows, target, ndev, axis, bucket_cap):
+    """Fixed-capacity bucket exchange: rows (cap, ar) with target shard ids;
+    rows routed via all_to_all; returns ((ndev*bucket_cap, ar) local rows,
+    dropped_count) — overflowed rows are counted, so the driver can retry
+    with bigger buckets."""
+    buckets, overflow = _route_to_buckets(rows, target, ndev, bucket_cap)
     recv = jax.lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0,
                               tiled=True)
-    return recv.reshape(ndev * bucket_cap, ar), jnp.sum(overflow)
+    return recv.reshape(ndev * bucket_cap, rows.shape[1]), overflow
 
 
 @dataclass(frozen=True)
 class DistConfig:
+    """Fixed capacities for the dry-run / back-compat entries (the general
+    executor plans its own per-shard capacities via ``plan._Caps``)."""
     shard_cap: int = 1 << 14         # per-shard store capacity
     delta_cap: int = 1 << 12         # per-shard delta capacity
     bucket_cap: int = 1 << 9         # per-destination exchange bucket
@@ -93,128 +169,387 @@ def _axis_size(mesh, axis):
     return n
 
 
-def distributed_tc_step(cfg: DistConfig, ndev: int):
-    """Builds the shard_map body for one full TC materialization:
-    T(X,Y) <- e(X,Y);   T(X,Z) <- T(X,Y) & e(Y,Z).
-
-    State per shard: store T (shard_cap, 2) [tuple-hash partitioned],
-    edges e (shard_cap, 2) [partitioned by col 0 = Y-join side], delta.
-    """
-    axis = cfg.axis
-
-    def body(e_by_src, t0):
-        # t0: initial T = e, tuple-hash partitioned
-        e_sorted = keysort_core(e_by_src, 0, pallas=False)
-
-        def round_fn(state):
-            t_store, delta, total_trg, rounds, done, dropped = state
-            # 1) repartition delta by join col (Y = col 1)
-            tgt = (_hash32(delta[:, 1].astype(jnp.uint32))
-                   % jnp.uint32(ndev)).astype(jnp.int32)
-            d_y, drop1 = _exchange(delta, tgt, ndev, axis, cfg.bucket_cap)
-            # 2) local join d_y.Y == e.src, projected to (d.X, e.Z)
-            d_sorted = keysort_core(d_y, 1, pallas=False)
-            total, per, cum, lo = join_count_core(d_sorted, e_sorted, 1, 0)
-            out_cap = cfg.delta_cap * 4
-            joined = join_gather_core(d_sorted, e_sorted, per, cum, lo,
-                                      total, out_cap)
-            new_rows = project_core(joined, (0, 3))
-            drop_join = jnp.maximum(total - out_cap, 0)
-            # 3) repartition by tuple hash, dedup, antijoin vs store
-            tgt2 = (_tuple_hash(new_rows) % jnp.uint32(ndev)).astype(jnp.int32)
-            arrived, drop2 = _exchange(new_rows, tgt2, ndev, axis,
-                                       cfg.bucket_cap)
-            arr_sorted = lexsort_core(arrived, pallas=False)
-            uniq = dedup_mask_core(arr_sorted, pallas=False)
-            store_sorted = lexsort_core(t_store, pallas=False)
-            fresh = jnp.logical_and(uniq, jnp.logical_not(
-                member_mask_core(arr_sorted, store_sorted)))
-            new_delta = compact_core(arr_sorted, fresh, cfg.delta_cap)
-            n_new = jnp.sum(fresh)
-            drop_delta = jnp.maximum(n_new - cfg.delta_cap, 0)
-            # 4) append to store (out-of-bounds writes dropped)
-            n_store = jnp.sum(t_store[:, 0] != PAD)
-            drop_store = jnp.maximum(n_store + n_new - cfg.shard_cap, 0)
-            pos = jnp.cumsum(fresh) - 1 + n_store
-            idx = jnp.where(fresh, pos, cfg.shard_cap)
-            t_store = t_store.at[idx].set(arr_sorted, mode="drop")
-            total_new = jax.lax.psum(n_new, axis)
-            total_trg = total_trg + jax.lax.psum(total, axis)
-            dropped = dropped + jax.lax.psum(
-                drop1 + drop2 + drop_join + drop_delta + drop_store, axis)
-            return (t_store, new_delta, total_trg, rounds + 1,
-                    total_new == 0, dropped)
-
-        def cond_fn(state):
-            _, _, _, rounds, done, _ = state
-            return jnp.logical_and(jnp.logical_not(done),
-                                   rounds < cfg.max_rounds)
-
-        state = (t0, t0[:cfg.delta_cap], jnp.zeros((), jnp.int32),
-                 jnp.zeros((), jnp.int32), jnp.array(False),
-                 jnp.zeros((), jnp.int32))
-        t_store, delta, triggers, rounds, done, dropped = jax.lax.while_loop(
-            cond_fn, round_fn, state)
-        count = jnp.sum(t_store[:, 0] != PAD)
-        return t_store, jax.lax.psum(count, axis), triggers, rounds, dropped
-
-    return body
+# ---------------------------------------------------------------------------
+# overflow-label enumeration (must mirror the flag order the traced round
+# emits: _exec_rule_traced appends pre / left / right exchange flags then
+# the join-capacity flag, per join step)
+# ---------------------------------------------------------------------------
+def _rule_ovf_labels(plan, use_pre):
+    labels = []
+    for j in range(len(plan.atoms)):
+        if use_pre and plan.pre is not None and plan.pre[0] == j:
+            labels.append(("bucket", (plan.key, "pre", j)))
+        if j >= 1:
+            labels.append(("bucket", (plan.key, "jl", j)))
+            labels.append(("bucket", (plan.key, "jr", j)))
+            labels.append(("join", (plan.key, j - 1)))
+    return labels
 
 
-def run_distributed_tc(edges: np.ndarray, mesh, cfg: DistConfig = DistConfig()):
-    """edges: (n,2) int32.  Partitions by hash, runs the shard_map loop."""
-    ndev = _axis_size(mesh, cfg.axis)
-    # host-side initial partitioning
-    def whash(x):
-        x = (x ^ (x >> 16)) * np.uint32(0x7feb352d)
-        x = (x ^ (x >> 15)) * np.uint32(0x846ca68b)
-        return x ^ (x >> 16)
-    tgt_src = whash(edges[:, 0].astype(np.uint32)) % ndev      # e by src col
-    th = np.uint32(0x9e3779b9)
-    for c in range(2):
-        th = whash(edges[:, c].astype(np.uint32) + th)
-    tgt_tuple = th % ndev
+def _round_ovf_labels(active, use_prefilter, derived):
+    labels = []
+    for plan, _ in active:
+        labels += _rule_ovf_labels(plan, use_prefilter)
+    for pred in derived:
+        labels += [("bucket", ("absorb", pred)),
+                   ("delta", pred), ("store", pred)]
+    return labels
 
-    def place(rows, tgt):
-        out = np.full((ndev, cfg.shard_cap, 2), np.iinfo(np.int32).max,
-                      np.int32)
-        fill = np.zeros(ndev, np.int64)
-        for r, t in zip(rows, tgt):
-            out[t, fill[t]] = r
-            fill[t] += 1
-        return out.reshape(ndev * cfg.shard_cap, 2)
 
-    # retry loop: silent truncation is never acceptable — if any capacity
-    # overflowed, double the buckets/deltas (bounded pow-2 growth, same
-    # two-phase discipline as the single-node engine)
-    for attempt in range(6):
-        e_sharded = place(edges, tgt_src)
-        t_sharded = place(edges, tgt_tuple)
-        body = distributed_tc_step(cfg, ndev)
-        fn = jax.jit(shard_map(
-            body, mesh=mesh,
-            in_specs=(P(cfg.axis, None), P(cfg.axis, None)),
-            out_specs=(P(cfg.axis, None), P(), P(), P(), P())))
-        t_store, count, triggers, rounds, dropped = fn(
-            jnp.asarray(e_sharded), jnp.asarray(t_sharded))
-        if int(dropped) == 0:
-            return t_store, int(count), int(triggers), int(rounds)
-        cfg = DistConfig(shard_cap=cfg.shard_cap * 2,
-                         delta_cap=cfg.delta_cap * 2,
-                         bucket_cap=cfg.bucket_cap * 2,
-                         max_rounds=cfg.max_rounds, axis=cfg.axis)
-    raise RuntimeError("distributed materialization: capacity retries "
-                       "exhausted")
+def _bucket_keys(labels):
+    return tuple(name for kind, name in labels if kind == "bucket")
+
+
+# ---------------------------------------------------------------------------
+# compiled sharded round program
+# ---------------------------------------------------------------------------
+def _dist_signature(mesh, axis, ndev, preds, caps, active, delta_in,
+                    use_prefilter):
+    derived = tuple(sorted({plan.head_pred for plan, _ in active}))
+    labels = _round_ovf_labels(active, use_prefilter, derived)
+    return ("dist_round", mesh, axis, ndev, preds,
+            tuple(caps.store[p] for p in preds),
+            tuple((plan.key, jd, tuple(caps.join_cap(plan, i)
+                                       for i in range(len(plan.joins))))
+                  for plan, jd in active),
+            tuple((p, caps.delta_cap(p)) for p in delta_in),
+            tuple((p, caps.delta_cap(p)) for p in derived),
+            tuple((k, caps.bucket_cap(k)) for k in _bucket_keys(labels)),
+            use_prefilter)
+
+
+def _build_dist_round(mesh, axis, ndev, preds, caps, active, delta_in,
+                      use_prefilter):
+    """One sharded materialization round as a single jitted shard_map
+    program.
+
+    Per-shard inputs: store blocks (tuple-hash partitioned, lexsorted, at
+    planner capacities) + per-shard counts, plus the live delta blocks.
+    Outputs: new stores / counts / deltas (per shard), the psum'd per-pred
+    fresh totals, the round's global trigger total, and the psum'd overflow
+    vector.  ``ovf_labels`` names each overflow slot so the driver can
+    double exactly the right capacity."""
+    derived = tuple(sorted({plan.head_pred for plan, _ in active}))
+    ovf_labels = _round_ovf_labels(active, use_prefilter, derived)
+    join_caps = {id(plan): tuple(caps.join_cap(plan, i)
+                                 for i in range(len(plan.joins)))
+                 for plan, _ in active}
+    delta_caps = {p: caps.delta_cap(p) for p in derived}
+    bucket_caps = {k: caps.bucket_cap(k) for k in _bucket_keys(ovf_labels)}
+
+    def body(store_datas, store_counts, delta_datas):
+        stores = dict(zip(preds, store_datas))
+        counts = {p: c[0] for p, c in zip(preds, store_counts)}
+        deltas = dict(zip(delta_in, delta_datas))
+        triggers = jnp.zeros((), jnp.int32)
+        ovfs = []
+        heads = {}
+        for plan, jd in active:
+            def route(rows, cols, tag, _pk=plan.key):
+                cap = bucket_caps[(_pk, *tag)]
+                tgt = (_cols_hash(rows, cols)
+                       % jnp.uint32(ndev)).astype(jnp.int32)
+                out, dropped = _exchange(rows, tgt, ndev, axis, cap)
+                return out, [dropped > 0]
+            inputs = [deltas[bp] if j == jd else stores[bp]
+                      for j, bp in enumerate(plan.body_preds)]
+            pre_data = stores[plan.head_pred] if use_prefilter else None
+            head, trg, flags = _exec_rule_traced(
+                plan, inputs, pre_data, join_caps[id(plan)], False,
+                route=route)
+            triggers += trg
+            ovfs += flags
+            heads.setdefault(plan.head_pred, []).append(head)
+        out_deltas, out_dcounts, fresh_tot = [], [], []
+        for pred in derived:
+            hs = heads[pred]
+            cat = hs[0] if len(hs) == 1 else jnp.concatenate(hs, axis=0)
+            # canonical-home repartition: duplicates of a tuple (across
+            # rules AND shards) all land on the shard its hash picks, so
+            # dedup + the antijoin against the store are local
+            tgt = (_tuple_hash(cat) % jnp.uint32(ndev)).astype(jnp.int32)
+            routed, dropped = _exchange(cat, tgt, ndev, axis,
+                                        bucket_caps[("absorb", pred)])
+            ovfs.append(dropped > 0)
+            ns, nc, delta, nf, (od, os_) = _absorb_traced(
+                [routed],
+                lambda rows, p=pred: jnp.logical_not(
+                    ops.member_mask_core(rows, stores[p])),
+                stores[pred], counts[pred], delta_caps[pred], False)
+            stores[pred] = ns
+            counts[pred] = nc
+            out_deltas.append(delta)
+            out_dcounts.append(nf)
+            fresh_tot.append(jax.lax.psum(nf, axis))
+            ovfs += [od, os_]
+        ovf_vec = (jnp.stack(ovfs).astype(jnp.int32) if ovfs
+                   else jnp.zeros((0,), jnp.int32))
+        return (tuple(stores[p] for p in preds),
+                tuple(counts[p].reshape(1) for p in preds),
+                tuple(out_deltas),
+                tuple(nf.reshape(1) for nf in out_dcounts),
+                tuple(fresh_tot),
+                jax.lax.psum(triggers, axis),
+                jax.lax.psum(ovf_vec, axis))
+
+    in_specs = (tuple(P(axis, None) for _ in preds),
+                tuple(P(axis) for _ in preds),
+                tuple(P(axis, None) for _ in delta_in))
+    out_specs = (tuple(P(axis, None) for _ in preds),
+                 tuple(P(axis) for _ in preds),
+                 tuple(P(axis, None) for _ in derived),
+                 tuple(P(axis) for _ in derived),
+                 tuple(P() for _ in derived),
+                 P(), P())
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs))
+    return fn, ovf_labels, derived
+
+
+# ---------------------------------------------------------------------------
+# sharded store (host-side bookkeeping around the device arrays)
+# ---------------------------------------------------------------------------
+class ShardedKB:
+    """Hash-partitioned store: per predicate, a global (ndev * store_cap,
+    ar) device array partitioned over the mesh axis (shard = tuple-hash %
+    ndev; each shard's valid rows lexsorted) plus per-shard fill counts on
+    the host.  ``fit`` re-pads every shard when the planner doubles a store
+    capacity (retry path only — steady-state rounds reuse the arrays the
+    previous round produced)."""
+
+    def __init__(self, kb, preds, ndev):
+        self.ndev = ndev
+        self.arity = {p: kb.rels[p].arity for p in preds}
+        self.data = {}               # pred -> device/np (ndev*cap, ar)
+        self.counts = {}             # pred -> np (ndev,) int32
+        self.per_shard_max = {}
+        for p in preds:
+            rows = np.asarray(kb.rels[p].np_rows())
+            if rows.size:
+                rows = np.unique(rows, axis=0)   # set semantics on entry
+            tgt = (np_tuple_hash(rows) % np.uint32(ndev)).astype(np.int64) \
+                if len(rows) else np.zeros(0, np.int64)
+            parts = []
+            for d in range(ndev):
+                part = rows[tgt == d]
+                if len(part):
+                    part = part[np.lexsort(part.T[::-1])]
+                parts.append(part)
+            self.counts[p] = np.array([len(pt) for pt in parts], np.int32)
+            self.per_shard_max[p] = int(self.counts[p].max(initial=0))
+            self.data[p] = parts     # packed once planner caps exist
+
+    def pack(self, caps):
+        """Materialize the per-shard blocks at the planner's store caps."""
+        for p, parts in self.data.items():
+            cap = caps.store[p]
+            out = np.full((self.ndev, cap, self.arity[p]), _NP_PAD, np.int32)
+            for d, part in enumerate(parts):
+                out[d, :len(part)] = part
+            self.data[p] = out.reshape(self.ndev * cap, self.arity[p])
+
+    def fit(self, pred, cap):
+        """Current store block re-padded per shard to ``cap`` rows."""
+        data = self.data[pred]
+        cur = data.shape[0] // self.ndev
+        if cur == cap:
+            return data
+        return refit_shards(data, self.ndev, cap)
+
+    def to_relations(self, kb):
+        """Fold the shards back into lexsorted single-device Relations."""
+        for p in self.data:
+            ar = self.arity[p]
+            blocks = np.asarray(self.data[p]).reshape(self.ndev, -1, ar)
+            parts = [blocks[d, :int(self.counts[p][d])]
+                     for d in range(self.ndev)]
+            rows = (np.concatenate(parts) if parts
+                    else np.zeros((0, ar), np.int32))
+            if len(rows):
+                rows = rows[np.lexsort(rows.T[::-1])]
+            kb.rels[p] = Relation.from_numpy(rows, sorted_by=lex_order(ar))
+
+
+def refit_shards(data, ndev, new_cap):
+    """Re-pad a (ndev * old_cap, ar) blocked array to (ndev * new_cap, ar)
+    per shard (capacities only grow, so no valid row is ever sliced off)."""
+    arr = np.asarray(data)
+    ar = arr.shape[-1]
+    arr = arr.reshape(ndev, -1, ar)
+    old = arr.shape[1]
+    out = np.full((ndev, new_cap, ar), _NP_PAD, np.int32)
+    out[:, :min(old, new_cap)] = arr[:, :min(old, new_cap)]
+    return out.reshape(ndev * new_cap, ar)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
+                            mesh=None, axis: tuple = ("data",),
+                            cfg: DistConfig | None = None):
+    """Sharded materialization of ``kb`` over ``mesh`` (default: every
+    local device on the "data" axis).  ``cfg``, when given, floors the
+    planner's per-shard store / delta / exchange-bucket capacities (callers
+    that know the instance scale skip the cold-start overflow retries).
+    Returns MatStats, or None when the program is outside the plannable
+    fragment (the caller falls back to the fused / two-phase executors)."""
+    from repro.engine.materialize import MatStats
+    if mode not in ("tg", "tg_noopt"):
+        return None
+    program = kb.program
+    plans = {}
+    for rule in program.rules:
+        plan = compile_rule_plan(rule, kb.dict)
+        if plan is None:
+            return None
+        plans[id(rule)] = plan
+
+    if mesh is None:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh()
+    ndev = _axis_size(mesh, axis)
+    preds = tuple(sorted(kb.rels))
+    use_prefilter = mode == "tg"
+    st = MatStats(mode=mode)
+    st.extra.update(dist=True, ndev=ndev)
+
+    skb = ShardedKB(kb, preds, ndev)
+    fp = (program_fingerprint((plans[id(r)].key for r in program.rules),
+                              sum(kb.rels[p].count for p in preds)),
+          "dist", ndev)
+    caps = _Caps(fp, {p: (None, skb.per_shard_max[p]) for p in preds},
+                 ndev=ndev)
+    if cfg is not None:
+        for p in preds:
+            caps.store[p] = max(caps.store[p], cfg.shard_cap)
+        caps._delta_guess = max(caps._delta_guess, cfg.delta_cap)
+        caps._bucket_guess = max(caps._bucket_guess, cfg.bucket_cap)
+    skb.pack(caps)
+
+    deltas: dict = {}    # pred -> device (ndev*delta_cap, ar), PAD-padded
+
+    def fit_delta(pred):
+        data = deltas[pred]
+        cap = caps.delta_cap(pred)
+        if data.shape[0] // ndev == cap:
+            return data
+        return refit_shards(data, ndev, cap)
+
+    def run_round(active, delta_preds, is_ext=False):
+        prefilter = use_prefilter and not is_ext   # no Def. 23 in round 1
+        for _ in range(_MAX_RETRIES):
+            sig = _dist_signature(mesh, axis, ndev, preds, caps, active,
+                                  delta_preds, prefilter)
+            fn, ovf_labels, derived = _cached_program(
+                sig, lambda: _build_dist_round(mesh, axis, ndev, preds, caps,
+                                               active, delta_preds,
+                                               prefilter))
+            out = fn(tuple(skb.fit(p, caps.store[p]) for p in preds),
+                     tuple(jnp.asarray(skb.counts[p]) for p in preds),
+                     tuple(fit_delta(p) for p in delta_preds))
+            n_stores, n_counts, n_deltas, n_dcounts, fresh, trg, ovf = out
+            # ONE blocking pull per round attempt, independent of ndev:
+            # counts + fresh totals + triggers + the overflow vector
+            pulled = jax.device_get((n_counts, fresh, trg, ovf))
+            ops.HOST_SYNC_STATS.dist_pulls += 1
+            cnts, fresh, trg, ovf = pulled
+            if not ovf.any():
+                for p, d, c in zip(preds, n_stores, cnts):
+                    skb.data[p] = d
+                    skb.counts[p] = np.asarray(c, np.int32)
+                st.triggers += int(trg)
+                new = {}
+                for p, d, ft in zip(derived, n_deltas, fresh):
+                    st.derived += int(ft)
+                    if int(ft):
+                        new[p] = d
+                return new
+            ops.HOST_SYNC_STATS.dist_retries += 1
+            # a rule active at several delta positions repeats its labels;
+            # dedupe so a shared capacity doubles once per retry
+            for label in {l for f, l in zip(ovf, ovf_labels) if f}:
+                caps.double(label)
+        raise RuntimeError("distributed round: capacity retries exhausted")
+
+    # round 1: extensional rules over B
+    ext_active = tuple((plans[id(r)], None)
+                       for r in program.extensional_rules())
+    if ext_active:
+        deltas = run_round(ext_active, (), is_ext=True)
+    st.rounds = 1
+
+    # fixpoint rounds (host-stepped: one compiled program + one scalar pull
+    # per round, psum convergence)
+    int_rules = program.intensional_rules()
+    while deltas and st.rounds < max_rounds:
+        live = tuple(sorted(deltas))
+        active = tuple((plans[id(r)], j) for r in int_rules
+                       for j, a in enumerate(r.body) if a.pred in deltas)
+        if not active:
+            break
+        deltas = run_round(active, live)
+        st.rounds += 1
+
+    skb.to_relations(kb)
+    caps.memoize()
+    return st
+
+
+# ---------------------------------------------------------------------------
+# back-compat TC entries (the hand-written TC step this module used to ship
+# is gone: TC is now just one more Datalog program over the general executor)
+# ---------------------------------------------------------------------------
+def _tc_program():
+    from repro.core.terms import parse_program
+    return parse_program("""
+        e(X, Y) -> T(X, Y)
+        T(X, Y) & e(Y, Z) -> T(X, Z)
+    """)
+
+
+def run_distributed_tc(edges: np.ndarray, mesh,
+                       cfg: DistConfig = DistConfig()):
+    """Transitive closure of int (n, 2) ``edges`` over the general sharded
+    executor; ``cfg``'s capacities floor the planner's.  Returns
+    (t_rows (m, 2) int np, count, triggers, rounds)."""
+    from repro.core.terms import Atom
+    from repro.engine.materialize import EngineKB
+    B = [Atom("e", (f"n{int(a)}", f"n{int(b)}")) for a, b in edges]
+    kb = EngineKB(_tc_program(), B)
+    st = materialize_distributed(kb, mode="tg", max_rounds=cfg.max_rounds,
+                                 mesh=mesh, axis=cfg.axis, cfg=cfg)
+    rows = np.array(sorted(
+        tuple(int(t[1:]) for t in atom.args)
+        for atom in kb.decode_facts() if atom.pred == "T"), np.int32)
+    return rows, len(rows), st.triggers, st.rounds
 
 
 def lower_distributed_tc(mesh, cfg: DistConfig = DistConfig()):
-    """Dry-run entry: lower+compile the distributed loop on a target mesh."""
+    """Dry-run entry: lower one compiled TG round of the TC program (delta
+    exchange + planned join + canonical-home absorb) at the configured
+    per-shard capacities on a target mesh."""
+    from repro.engine.dictionary import Dictionary
     ndev = _axis_size(mesh, cfg.axis)
-    body = distributed_tc_step(cfg, ndev)
-    fn = jax.jit(shard_map(
-        body, mesh=mesh,
-        in_specs=(P(cfg.axis, None), P(cfg.axis, None)),
-        out_specs=(P(cfg.axis, None), P(), P(), P(), P())))
-    n = ndev * cfg.shard_cap
-    spec = jax.ShapeDtypeStruct((n, 2), jnp.int32)
-    return fn.lower(spec, spec)
+    program = _tc_program()
+    dic = Dictionary()
+    plans = [compile_rule_plan(r, dic) for r in program.rules]
+    preds = ("T", "e")
+    caps = _Caps(("dryrun", ndev), {p: (None, 1) for p in preds}, ndev=ndev)
+    active = ((plans[1], 0),)                    # T-delta in body position 0
+    derived = ("T",)
+    labels = _round_ovf_labels(active, True, derived)
+    for p in preds:
+        caps.store[p] = cfg.shard_cap
+    caps.delta["T"] = cfg.delta_cap
+    caps.join[(plans[1].key, 0)] = cfg.delta_cap * 4
+    for key in _bucket_keys(labels):
+        caps.bucket[key] = cfg.bucket_cap
+    fn, _, _ = _build_dist_round(mesh, cfg.axis, ndev, preds, caps, active,
+                                 ("T",), True)
+    s32 = jnp.int32
+    store_specs = tuple(jax.ShapeDtypeStruct((ndev * cfg.shard_cap, 2), s32)
+                        for _ in preds)
+    count_specs = tuple(jax.ShapeDtypeStruct((ndev,), s32) for _ in preds)
+    delta_specs = (jax.ShapeDtypeStruct((ndev * cfg.delta_cap, 2), s32),)
+    return fn.lower(store_specs, count_specs, delta_specs)

@@ -5,22 +5,21 @@ count to the host (one blocking sync per primitive call) to pick pow-2
 output buckets — on small-delta rounds those host round-trips, not the join
 arithmetic, dominate wall time.  This module removes them:
 
-* A **capacity planner** (``_Caps``) pre-sizes every intermediate — filter /
-  join / project / dedup / antijoin outputs, per-predicate delta buffers and
-  store buckets — before a round is compiled.  Successful capacities are
-  memoized per program fingerprint so warmed-up runs plan right first try.
-* ``compile_rule_plan()`` stitches the traceable cores from ``ops`` into one
-  jitted, shape-stable program per (rule set, capacity plan): body filters,
-  the Def. 23 antijoin pre-restriction, the sort-merge join chain, head
-  projection, and the per-predicate absorb (dedup + antijoin vs store +
-  incremental sorted merge) all run in a single XLA executable.  The only
-  device->host traffic per round is one scalar bundle: counts, the trigger
-  total, and an overflow vector (``HOST_SYNC_STATS.fused_pulls``).
+* The **rule-plan IR** (``repro.engine.plan``: ``RulePlan`` /
+  ``compile_rule_plan``), its capacity planner (``_Caps``), and the traced
+  round pieces (``_exec_rule_traced`` / ``_absorb_traced``) are backend-
+  neutral — the distributed executor consumes the same plans.  This module
+  stitches them into one jitted, shape-stable program per (rule set,
+  capacity plan): body filters, the Def. 23 antijoin pre-restriction, the
+  sort-merge join chain, head projection, and the per-predicate absorb
+  (dedup + antijoin vs store + incremental sorted merge) all run in a
+  single XLA executable.  The only device->host traffic per round is one
+  scalar bundle: counts, the trigger total, and an overflow vector
+  (``HOST_SYNC_STATS.fused_pulls``).
 * A **fused fixpoint driver** runs whole semi-naive/TG rounds this way, and
   once the remaining computation is *linear* — every still-active rule has
   exactly one body atom whose predicate can still change — it finishes the
-  entire fixpoint inside one ``lax.while_loop`` (the same architecture as
-  the sharded loop in ``repro.engine.distributed``), with loop-state buffers
+  entire fixpoint inside one ``lax.while_loop``, with loop-state buffers
   donated to XLA on accelerator backends.
 
 Overflow semantics (mirrors the distributed bucket-exchange contract):
@@ -40,238 +39,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.terms import is_var
 from repro.engine import ops
-from repro.engine.relation import PAD, Relation, lex_order, next_pow2
+from repro.engine.plan import (_MAX_RETRIES, _absorb_traced, _cached_program,
+                               _Caps, _exec_rule_traced, compile_rule_plan,
+                               program_fingerprint, RulePlan)
+from repro.engine.relation import PAD, Relation, lex_order
 
-_MAX_RETRIES = 40
-
-# successful planner capacities keyed by (program fingerprint, kind, name) —
-# reused across EngineKB instances so a warmed-up program never re-learns
-# its buckets (benchmarks warm on the same instance they time)
-_CAP_MEMO: dict = {}
-_CAP_MEMO_LIMIT = 8192
-
-# compiled round / fixpoint programs keyed by their full static signature;
-# bounded FIFO so superseded capacity plans don't strand XLA executables
-# forever in long-lived processes
-_COMPILE_CACHE: dict = {}
-_COMPILE_CACHE_LIMIT = 128
-
-
-def _cached_program(sig, build):
-    prog = _COMPILE_CACHE.get(sig)
-    if prog is None:
-        while len(_COMPILE_CACHE) >= _COMPILE_CACHE_LIMIT:
-            _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))
-        prog = _COMPILE_CACHE[sig] = build()
-    return prog
-
-
-# ---------------------------------------------------------------------------
-# static rule plans
-# ---------------------------------------------------------------------------
-class RulePlan:
-    """Trace-time description of one Datalog rule: per-atom filters, the
-    Def. 23 pre-restriction slot, the left-deep join chain, and the head
-    projection.  ``key`` is a pure-python fingerprint used for compile-cache
-    and capacity-memo keys."""
-
-    def __init__(self, rule, dic):
-        from repro.engine.materialize import _atom_filters
-        self.head_pred = rule.head.pred
-        self.body_preds = tuple(a.pred for a in rule.body)
-        self.atoms = []            # (eq_pairs, const_pairs) per body atom
-        self.joins = []            # (lkey in cur, rkey in atom, eq2) per join
-        var_col: dict = {}
-        width = 0
-        self.ok = not rule.existentials
-        for j, atom in enumerate(rule.body):
-            eq, consts, vc = _atom_filters(atom, dic)
-            self.atoms.append((eq, consts))
-            if j == 0:
-                var_col = dict(vc)
-                width = atom.arity
-                continue
-            shared = [v for v in vc if v in var_col]
-            if not shared:
-                self.ok = False    # disconnected body -> cross join, not fused
-                break
-            v0 = shared[0]
-            eq2 = tuple((var_col[v], width + vc[v]) for v in shared[1:])
-            self.joins.append((var_col[v0], vc[v0], eq2))
-            for v, c in vc.items():
-                var_col.setdefault(v, width + c)
-            width += atom.arity
-        # Def. 23 pre-restriction: first body atom whose own columns
-        # determine the full head tuple (same choice as execute_rule)
-        self.pre = None
-        if self.ok:
-            for j, a in enumerate(rule.body):
-                _, _, vc = _atom_filters(a, dic)
-                if rule.head.args and all(is_var(t) and t in vc
-                                          for t in rule.head.args):
-                    self.pre = (j, tuple(vc[t] for t in rule.head.args))
-                    break
-            self.head_spec = tuple(
-                ("col", var_col[t]) if is_var(t) else ("const", dic.encode(t))
-                for t in rule.head.args)
-            self.key = (self.head_pred, self.body_preds, tuple(self.atoms),
-                        tuple(self.joins), self.pre, self.head_spec)
-
-
-def compile_rule_plan(rule, dic):
-    """Build the static plan for one rule, or None if the rule is outside
-    the fused fragment (existentials / disconnected body)."""
-    plan = RulePlan(rule, dic)
-    return plan if plan.ok else None
-
-
-# ---------------------------------------------------------------------------
-# traced pieces (built from the ops cores; no host interaction)
-# ---------------------------------------------------------------------------
-def _project_head_core(data, spec):
-    cols = []
-    for kind, v in spec:
-        if kind == "col":
-            cols.append(data[:, v])
-        else:
-            cols.append(jnp.full((data.shape[0],), v, jnp.int32))
-    valid = data[:, 0] != PAD
-    return jnp.where(valid[:, None], jnp.stack(cols, axis=1), PAD)
-
-
-def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
-                      prefilter=None):
-    """One rule body over pre-sized inputs.  ``inputs`` are lexsorted padded
-    blocks (stores / deltas — the sorted-store invariant is the fused
-    precondition), so primary-column join keys need no sort.  The Def. 23
-    pre-restriction either antijoins against ``pre_data`` (one haystack) or
-    calls the ``prefilter(rows, cols) -> keep_mask`` hook (the fixpoint loop
-    probes store | tail).  Returns (head_rows, triggers, overflow_flags)."""
-    ovfs = []
-    cur = None
-    cur_skey = None                # statically-known sort column of cur
-    for j, (eq, consts) in enumerate(plan.atoms):
-        data = inputs[j]
-        if eq or consts:
-            mask = ops.filter_mask_core(data, eq, consts)
-            data = ops.compact_core(data, mask, data.shape[0])
-        if plan.pre is not None and plan.pre[0] == j and (
-                pre_data is not None or prefilter is not None):
-            if prefilter is not None:
-                keep = prefilter(data, plan.pre[1])
-            else:
-                keep = ops.anti_keep_core(data, pre_data, plan.pre[1],
-                                          pallas=pallas)
-            data = ops.compact_core(data, keep, data.shape[0])
-        if cur is None:
-            cur, cur_skey = data, 0
-            continue
-        lk, rk, eq2 = plan.joins[j - 1]
-        ls = cur if cur_skey == lk else ops.keysort_core(cur, lk,
-                                                         pallas=pallas)
-        rs = data if rk == 0 else ops.keysort_core(data, rk, pallas=pallas)
-        total, per, cum, lo = ops.join_count_core(ls, rs, lk, rk)
-        cap = join_caps[j - 1]
-        ovfs.append(total > cap)
-        cur = ops.join_gather_core(ls, rs, per, cum, lo, total, cap)
-        cur_skey = lk              # output rows follow ls's key order
-        if eq2:
-            mask = ops.filter_mask_core(cur, eq2, ())
-            cur = ops.compact_core(cur, mask, cap)
-    triggers = jnp.sum(cur[:, 0] != PAD).astype(jnp.int32)
-    return _project_head_core(cur, plan.head_spec), triggers, ovfs
-
-
-def _absorb_traced(heads, fresh_mask_fn, into_data, into_count, delta_cap,
-                   pallas):
-    """Round-level redundancy filtering + merge for one predicate: concat
-    rule outputs, lexsort + first-occurrence dedup, keep rows passing
-    ``fresh_mask_fn`` (non-membership in the store — or in store | tail
-    inside the fixpoint loop), compact the fresh rows to the delta bucket,
-    and fold them into ``into_data`` (the store, or the loop's tail buffer)
-    with the incremental sorted merge.  Returns
-    (merged, new_count, delta, n_fresh, (delta_overflow, merge_overflow))."""
-    cat = heads[0] if len(heads) == 1 else jnp.concatenate(heads, axis=0)
-    s = ops.lexsort_core(cat, pallas=pallas)
-    uniq = ops.dedup_mask_core(s, pallas=pallas)
-    fresh_mask = jnp.logical_and(uniq, fresh_mask_fn(s))
-    n_fresh = jnp.sum(fresh_mask).astype(jnp.int32)
-    delta = ops.compact_core(s, fresh_mask, delta_cap)
-    new_count = into_count + n_fresh
-    merged = ops.merge_core(into_data, delta, into_count, n_fresh)
-    return (merged, new_count, delta, n_fresh,
-            (n_fresh > delta_cap, new_count > into_data.shape[0]))
-
-
-# ---------------------------------------------------------------------------
-# capacity planner
-# ---------------------------------------------------------------------------
-class _Caps:
-    """Pre-sizes every planned buffer; doubles on overflow; memoizes
-    successful sizes per program fingerprint."""
-
-    def __init__(self, fp, stores):
-        self.fp = fp
-        base = max([c for _, c in stores.values()] + [1])
-        self.store = {}
-        self.delta = {}
-        self.tail = {}
-        self.join = {}
-        for pred, (data, count) in stores.items():
-            # converged capacities from a previous run of this program
-            # dominate the cold-start guess (guesses must not drift upward
-            # with the memoized sizes, or every run re-plans and recompiles)
-            memo = _CAP_MEMO.get((fp, "store", pred), 0)
-            guess = memo or next_pow2(max(32, 4 * max(count, 1)))
-            self.store[pred] = max(guess, next_pow2(max(count, 1)))
-        self._delta_guess = next_pow2(max(64, 2 * base))
-
-    def delta_cap(self, pred):
-        if pred not in self.delta:
-            self.delta[pred] = (_CAP_MEMO.get((self.fp, "delta", pred), 0)
-                                or self._delta_guess)
-        return self.delta[pred]
-
-    def join_cap(self, plan, idx):
-        key = (plan.key, idx)
-        if key not in self.join:
-            self.join[key] = (_CAP_MEMO.get((self.fp, "join", key), 0)
-                              or next_pow2(max(64, 2 * self._delta_guess)))
-        return self.join[key]
-
-    def tail_cap(self, pred):
-        """Sorted-tail bucket for the fixpoint loop: new facts accumulate
-        here (O(tail) merges per iteration instead of O(store)) until it
-        fills and the host folds it into the store."""
-        if pred not in self.tail:
-            self.tail[pred] = (_CAP_MEMO.get((self.fp, "tail", pred), 0)
-                               or 4 * self.delta_cap(pred))
-        return self.tail[pred]
-
-    def double(self, label):
-        kind, name = label
-        if kind == "store":
-            self.store[name] *= 2
-        elif kind == "delta":
-            self.delta[name] *= 2
-        elif kind == "tail":
-            self.tail[name] *= 2
-        else:
-            self.join[name] *= 2
-
-    def memoize(self):
-        while len(_CAP_MEMO) >= _CAP_MEMO_LIMIT:
-            _CAP_MEMO.pop(next(iter(_CAP_MEMO)))
-        for pred, cap in self.store.items():
-            _CAP_MEMO[(self.fp, "store", pred)] = cap
-        for pred, cap in self.delta.items():
-            _CAP_MEMO[(self.fp, "delta", pred)] = cap
-        for pred, cap in self.tail.items():
-            _CAP_MEMO[(self.fp, "tail", pred)] = cap
-        for key, cap in self.join.items():
-            _CAP_MEMO[(self.fp, "join", key)] = cap
+__all__ = ["RulePlan", "compile_rule_plan", "materialize_fused"]
 
 
 # ---------------------------------------------------------------------------
@@ -528,8 +302,8 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000):
         if rel.count and not rel.is_lexsorted:
             rel = ops.dedup(rel)
         stores[p], counts[p] = rel.data, rel.count
-    fp = (tuple(plans[id(r)].key for r in program.rules),
-          next_pow2(max(sum(counts.values()), 1)))
+    fp = program_fingerprint((plans[id(r)].key for r in program.rules),
+                             sum(counts.values()))
     caps = _Caps(fp, {p: (stores[p], counts[p]) for p in preds})
     for p in preds:
         stores[p] = ops.fit_rows(stores[p], caps.store[p])
@@ -566,9 +340,10 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000):
                         new[p] = (d, int(c))
                 return new
             ops.HOST_SYNC_STATS.fused_retries += 1
-            for flag, label in zip(ovf, ovf_labels):
-                if flag:
-                    caps.double(label)
+            # a rule active at several delta positions repeats its join
+            # labels; dedupe so a shared capacity doubles once per retry
+            for label in {l for f, l in zip(ovf, ovf_labels) if f}:
+                caps.double(label)
             for p in preds:
                 stores[p] = ops.fit_rows(stores[p], caps.store[p])
         raise RuntimeError("fused round: capacity retries exhausted")

@@ -22,6 +22,12 @@ XLA program, and linear-tail fixpoints run inside ``lax.while_loop``.
 Programs outside the fused fragment (existentials, disconnected bodies)
 fall back to the two-phase executor below; results are identical either
 way (gated by ``tests/test_differential.py``).
+
+With ``backend="dist"`` (or ``REPRO_DIST=1``), the same rule plans run on
+the sharded shard_map executor (``repro.engine.distributed``): facts
+hash-partitioned across local devices, exchanges at the join / absorb
+boundaries, one host pull per round.  Same fragment, same fallback, same
+differential gate.
 """
 from __future__ import annotations
 
@@ -196,12 +202,26 @@ class MatStats:
 
 
 def materialize(kb: EngineKB, mode: str = "tg", max_rounds: int = 10_000,
-                tg_eg=None, cleaning: bool = True) -> MatStats:
+                tg_eg=None, cleaning: bool = True,
+                backend: Optional[str] = None) -> MatStats:
     """mode: seminaive (VLog-like, per-rule filtering) | tg_noopt (TG round-
-    level filtering) | tg (tg_noopt + Def. 23 prefilter) | tg_linear."""
+    level filtering) | tg (tg_noopt + Def. 23 prefilter) | tg_linear.
+
+    backend: None (env-driven: ``REPRO_DIST=1`` selects "dist") | "dist"
+    (sharded shard_map executor over every local device) | "local".  The
+    distributed backend covers the plannable fragment of ``tg``/``tg_noopt``
+    (no existentials, connected bodies); anything else falls back to the
+    fused / two-phase executors below."""
     if mode == "tg_linear":
         return _materialize_tg_linear(kb, tg_eg, cleaning)
     assert mode in ("seminaive", "tg", "tg_noopt")
+    if backend is None and ops.dist_enabled():
+        backend = "dist"
+    if backend == "dist" and mode in ("tg", "tg_noopt"):
+        from repro.engine.distributed import materialize_distributed
+        st = materialize_distributed(kb, mode=mode, max_rounds=max_rounds)
+        if st is not None:  # None: outside the plannable fragment, fall back
+            return st
     if mode in ("tg", "tg_noopt") and ops.fused_enabled():
         from repro.engine.fused import materialize_fused
         st = materialize_fused(kb, mode=mode, max_rounds=max_rounds)

@@ -48,6 +48,7 @@ Env-flag matrix
 ``REPRO_USE_PALLAS`` ``0``   Pallas kernels for sort/unique/probe inner loops
 ``REPRO_SORTED_STORE`` ``1`` sortedness markers + incremental merge-union
 ``REPRO_FUSED``      ``0``   fused round executor (one XLA program per round)
+``REPRO_DIST``       ``0``   sharded shard_map executor over all local devices
 =================== ======= ====================================================
 """
 from __future__ import annotations
@@ -79,6 +80,12 @@ def sorted_store_enabled() -> bool:
 def fused_enabled() -> bool:
     """Route eligible materialization rounds through the fused executor."""
     return os.environ.get("REPRO_FUSED", "0") == "1"
+
+
+def dist_enabled() -> bool:
+    """Route eligible materialization through the sharded (shard_map)
+    executor over every local device (``materialize(backend="dist")``)."""
+    return os.environ.get("REPRO_DIST", "0") == "1"
 
 
 _KERNELS = None
@@ -118,18 +125,23 @@ class HostSyncStats:
     Each two-phase wrapper pulls its count-pass result to the host before it
     can pick an output bucket (``count_pulls`` — one per primitive call).
     The fused executor pulls once per compiled round / fixpoint attempt
-    (``fused_pulls``) and counts capacity-overflow recompile-and-retry
-    events (``fused_retries``).  ``total()`` is the engine's host-sync work
-    metric, reported next to trigger counts by the benchmarks."""
+    (``fused_pulls``), the distributed executor once per sharded round
+    attempt regardless of the shard count (``dist_pulls``); both count
+    capacity-overflow recompile-and-retry events (``fused_retries`` /
+    ``dist_retries``).  ``total()`` is the engine's host-sync work metric,
+    reported next to trigger counts by the benchmarks."""
     count_pulls: int = 0
     fused_pulls: int = 0
     fused_retries: int = 0
+    dist_pulls: int = 0
+    dist_retries: int = 0
 
     def reset(self):
         self.count_pulls = self.fused_pulls = self.fused_retries = 0
+        self.dist_pulls = self.dist_retries = 0
 
     def total(self) -> int:
-        return self.count_pulls + self.fused_pulls
+        return self.count_pulls + self.fused_pulls + self.dist_pulls
 
 
 HOST_SYNC_STATS = HostSyncStats()

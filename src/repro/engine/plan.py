@@ -1,0 +1,325 @@
+"""Backend-neutral rule-plan IR: *what* a materialization round computes.
+
+A :class:`RulePlan` is the static, trace-time description of one Datalog
+rule — per-atom filters, the Def. 23 antijoin pre-restriction slot, the
+left-deep join chain, and the head projection — with a pure-python ``key``
+fingerprint.  ``compile_rule_plan`` builds one (or ``None`` for rules
+outside the plannable fragment: existentials, disconnected bodies).
+
+The plan describes what a round computes; *where* it runs is an executor
+choice.  Three physical executors consume the same programs:
+
+* the two-phase executor (``repro.engine.materialize``) — the reference
+  path (it interprets rules directly; one blocking host pull per primitive),
+* the fused round executor (``repro.engine.fused``) — one jitted XLA
+  program per round on a single device,
+* the distributed executor (``repro.engine.distributed``) — the same plan
+  walk inside ``shard_map`` over hash-partitioned shards, with fixed-
+  capacity bucket exchanges at the pre-restriction / join / absorb
+  boundaries.
+
+This module also owns the capacity + overflow contract the compiled
+executors share:
+
+* :class:`_Caps` pre-sizes every planned buffer (store / delta / tail /
+  join / exchange bucket) before a program is compiled, and memoizes
+  successful sizes per :func:`program_fingerprint` in the module-level
+  ``_CAP_MEMO`` so warmed-up programs plan right first try.
+* Every planned capacity gets an in-program overflow flag (``needed >
+  planned``).  When any flag fires, the executor discards the round's
+  outputs, doubles exactly the overflowed capacities
+  (``_Caps.double(label)``), recompiles, and retries the same round from
+  inputs it still holds.  Labels are ``(kind, name)`` pairs; an executor
+  must emit its flags in exactly the order it enumerates its labels.
+* :func:`_cached_program` is the shared bounded FIFO compile cache keyed
+  by each executor's full static signature.
+
+``_exec_rule_traced`` / ``_absorb_traced`` are the traced round pieces
+built from the ``repro.engine.ops`` cores.  The optional ``route`` hook
+lets the distributed executor insert a bucket exchange before the Def. 23
+pre-restriction and before both sides of every join without duplicating
+the chain walk.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.terms import is_var
+from repro.engine import ops
+from repro.engine.relation import PAD, next_pow2
+
+_MAX_RETRIES = 40
+
+# successful planner capacities keyed by (program fingerprint, kind, name) —
+# reused across EngineKB instances so a warmed-up program never re-learns
+# its buckets (benchmarks warm on the same instance they time)
+_CAP_MEMO: dict = {}
+_CAP_MEMO_LIMIT = 8192
+
+# compiled round / fixpoint programs keyed by their full static signature;
+# bounded FIFO so superseded capacity plans don't strand XLA executables
+# forever in long-lived processes
+_COMPILE_CACHE: dict = {}
+_COMPILE_CACHE_LIMIT = 128
+
+
+def _cached_program(sig, build):
+    prog = _COMPILE_CACHE.get(sig)
+    if prog is None:
+        while len(_COMPILE_CACHE) >= _COMPILE_CACHE_LIMIT:
+            _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))
+        prog = _COMPILE_CACHE[sig] = build()
+    return prog
+
+
+def program_fingerprint(plan_keys, total_count):
+    """Capacity-memo key for one (program, instance scale): the rule plan
+    keys plus the pow-2 bucket of the instance size, so converged capacities
+    transfer across runs of the same program at the same scale."""
+    return (tuple(plan_keys), next_pow2(max(int(total_count), 1)))
+
+
+# ---------------------------------------------------------------------------
+# static rule plans
+# ---------------------------------------------------------------------------
+class RulePlan:
+    """Trace-time description of one Datalog rule: per-atom filters, the
+    Def. 23 pre-restriction slot, the left-deep join chain, and the head
+    projection.  ``key`` is a pure-python fingerprint used for compile-cache
+    and capacity-memo keys."""
+
+    def __init__(self, rule, dic):
+        from repro.engine.materialize import _atom_filters
+        self.head_pred = rule.head.pred
+        self.body_preds = tuple(a.pred for a in rule.body)
+        self.atoms = []            # (eq_pairs, const_pairs) per body atom
+        self.joins = []            # (lkey in cur, rkey in atom, eq2) per join
+        var_col: dict = {}
+        width = 0
+        self.ok = not rule.existentials
+        for j, atom in enumerate(rule.body):
+            eq, consts, vc = _atom_filters(atom, dic)
+            self.atoms.append((eq, consts))
+            if j == 0:
+                var_col = dict(vc)
+                width = atom.arity
+                continue
+            shared = [v for v in vc if v in var_col]
+            if not shared:
+                self.ok = False    # disconnected body -> cross join, not fused
+                break
+            v0 = shared[0]
+            eq2 = tuple((var_col[v], width + vc[v]) for v in shared[1:])
+            self.joins.append((var_col[v0], vc[v0], eq2))
+            for v, c in vc.items():
+                var_col.setdefault(v, width + c)
+            width += atom.arity
+        # Def. 23 pre-restriction: first body atom whose own columns
+        # determine the full head tuple (same choice as execute_rule)
+        self.pre = None
+        if self.ok:
+            for j, a in enumerate(rule.body):
+                _, _, vc = _atom_filters(a, dic)
+                if rule.head.args and all(is_var(t) and t in vc
+                                          for t in rule.head.args):
+                    self.pre = (j, tuple(vc[t] for t in rule.head.args))
+                    break
+            self.head_spec = tuple(
+                ("col", var_col[t]) if is_var(t) else ("const", dic.encode(t))
+                for t in rule.head.args)
+            self.key = (self.head_pred, self.body_preds, tuple(self.atoms),
+                        tuple(self.joins), self.pre, self.head_spec)
+
+
+def compile_rule_plan(rule, dic):
+    """Build the static plan for one rule, or None if the rule is outside
+    the plannable fragment (existentials / disconnected body)."""
+    plan = RulePlan(rule, dic)
+    return plan if plan.ok else None
+
+
+# ---------------------------------------------------------------------------
+# traced pieces (built from the ops cores; no host interaction)
+# ---------------------------------------------------------------------------
+def _project_head_core(data, spec):
+    cols = []
+    for kind, v in spec:
+        if kind == "col":
+            cols.append(data[:, v])
+        else:
+            cols.append(jnp.full((data.shape[0],), v, jnp.int32))
+    valid = data[:, 0] != PAD
+    return jnp.where(valid[:, None], jnp.stack(cols, axis=1), PAD)
+
+
+def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
+                      prefilter=None, route=None):
+    """One rule body over pre-sized inputs.  ``inputs`` are lexsorted padded
+    blocks (stores / deltas — the sorted-store invariant is the compiled
+    executors' precondition), so primary-column join keys need no sort.  The
+    Def. 23 pre-restriction either antijoins against ``pre_data`` (one
+    haystack) or calls the ``prefilter(rows, cols) -> keep_mask`` hook (the
+    fused fixpoint loop probes store | tail).  When ``route`` is given (the
+    distributed executor), rows are re-partitioned before the
+    pre-restriction and before both sides of each join —
+    ``route(rows, key_cols, tag) -> (rows', [overflow_flags])`` — and
+    routed blocks lose their known sort order, so the chain re-sorts them.
+    Returns (head_rows, triggers, overflow_flags); the flag order is pre /
+    left / right exchange flags then the join-capacity flag, per join step
+    (executors enumerate matching labels statically)."""
+    ovfs = []
+    cur = None
+    cur_skey = None                # statically-known sort column of cur
+    for j, (eq, consts) in enumerate(plan.atoms):
+        data = inputs[j]
+        data_skey = 0              # inputs arrive lexsorted (primary col 0)
+        if eq or consts:
+            mask = ops.filter_mask_core(data, eq, consts)
+            data = ops.compact_core(data, mask, data.shape[0])
+        if plan.pre is not None and plan.pre[0] == j and (
+                pre_data is not None or prefilter is not None):
+            if prefilter is not None:
+                keep = prefilter(data, plan.pre[1])
+            else:
+                if route is not None:
+                    data, flags = route(data, plan.pre[1], ("pre", j))
+                    ovfs += flags
+                    data_skey = None
+                keep = ops.anti_keep_core(data, pre_data, plan.pre[1],
+                                          pallas=pallas)
+            data = ops.compact_core(data, keep, data.shape[0])
+        if cur is None:
+            cur, cur_skey = data, data_skey
+            continue
+        lk, rk, eq2 = plan.joins[j - 1]
+        if route is not None:
+            cur, flags = route(cur, (lk,), ("jl", j))
+            ovfs += flags
+            cur_skey = None
+            data, flags = route(data, (rk,), ("jr", j))
+            ovfs += flags
+            data_skey = None
+        ls = cur if cur_skey == lk else ops.keysort_core(cur, lk,
+                                                         pallas=pallas)
+        rs = data if data_skey == rk else ops.keysort_core(data, rk,
+                                                           pallas=pallas)
+        total, per, cum, lo = ops.join_count_core(ls, rs, lk, rk)
+        cap = join_caps[j - 1]
+        ovfs.append(total > cap)
+        cur = ops.join_gather_core(ls, rs, per, cum, lo, total, cap)
+        cur_skey = lk              # output rows follow ls's key order
+        if eq2:
+            mask = ops.filter_mask_core(cur, eq2, ())
+            cur = ops.compact_core(cur, mask, cap)
+    triggers = jnp.sum(cur[:, 0] != PAD).astype(jnp.int32)
+    return _project_head_core(cur, plan.head_spec), triggers, ovfs
+
+
+def _absorb_traced(heads, fresh_mask_fn, into_data, into_count, delta_cap,
+                   pallas):
+    """Round-level redundancy filtering + merge for one predicate: concat
+    rule outputs, lexsort + first-occurrence dedup, keep rows passing
+    ``fresh_mask_fn`` (non-membership in the store — or in store | tail
+    inside the fused fixpoint loop), compact the fresh rows to the delta
+    bucket, and fold them into ``into_data`` (the store, or the loop's tail
+    buffer) with the incremental sorted merge.  Returns
+    (merged, new_count, delta, n_fresh, (delta_overflow, merge_overflow))."""
+    cat = heads[0] if len(heads) == 1 else jnp.concatenate(heads, axis=0)
+    s = ops.lexsort_core(cat, pallas=pallas)
+    uniq = ops.dedup_mask_core(s, pallas=pallas)
+    fresh_mask = jnp.logical_and(uniq, fresh_mask_fn(s))
+    n_fresh = jnp.sum(fresh_mask).astype(jnp.int32)
+    delta = ops.compact_core(s, fresh_mask, delta_cap)
+    new_count = into_count + n_fresh
+    merged = ops.merge_core(into_data, delta, into_count, n_fresh)
+    return (merged, new_count, delta, n_fresh,
+            (n_fresh > delta_cap, new_count > into_data.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# capacity planner
+# ---------------------------------------------------------------------------
+class _Caps:
+    """Pre-sizes every planned buffer; doubles on overflow; memoizes
+    successful sizes per program fingerprint.
+
+    Capacity kinds: per-predicate ``store`` / ``delta`` / ``tail`` buckets,
+    per-join-step ``join`` output buckets, and per-exchange-site ``bucket``
+    capacities (distributed executor: the per-destination bucket of one
+    ``_exchange`` call; the received block is ``ndev * bucket`` rows).  For
+    the distributed executor all counts (and hence all planned capacities)
+    are per shard."""
+
+    def __init__(self, fp, stores, ndev: int = 1):
+        self.fp = fp
+        base = max([c for _, c in stores.values()] + [1])
+        self.store = {}
+        self.delta = {}
+        self.tail = {}
+        self.join = {}
+        self.bucket = {}
+        for pred, (data, count) in stores.items():
+            # converged capacities from a previous run of this program
+            # dominate the cold-start guess (guesses must not drift upward
+            # with the memoized sizes, or every run re-plans and recompiles)
+            memo = _CAP_MEMO.get((fp, "store", pred), 0)
+            guess = memo or next_pow2(max(32, 4 * max(count, 1)))
+            self.store[pred] = max(guess, next_pow2(max(count, 1)))
+        self._delta_guess = next_pow2(max(64, 2 * base))
+        self._bucket_guess = next_pow2(max(32, 2 * base // max(ndev, 1)))
+
+    def delta_cap(self, pred):
+        if pred not in self.delta:
+            self.delta[pred] = (_CAP_MEMO.get((self.fp, "delta", pred), 0)
+                                or self._delta_guess)
+        return self.delta[pred]
+
+    def join_cap(self, plan, idx):
+        key = (plan.key, idx)
+        if key not in self.join:
+            self.join[key] = (_CAP_MEMO.get((self.fp, "join", key), 0)
+                              or next_pow2(max(64, 2 * self._delta_guess)))
+        return self.join[key]
+
+    def tail_cap(self, pred):
+        """Sorted-tail bucket for the fused fixpoint loop: new facts
+        accumulate here (O(tail) merges per iteration instead of O(store))
+        until it fills and the host folds it into the store."""
+        if pred not in self.tail:
+            self.tail[pred] = (_CAP_MEMO.get((self.fp, "tail", pred), 0)
+                               or 4 * self.delta_cap(pred))
+        return self.tail[pred]
+
+    def bucket_cap(self, key):
+        """Per-destination bucket of one distributed exchange site."""
+        if key not in self.bucket:
+            self.bucket[key] = (_CAP_MEMO.get((self.fp, "bucket", key), 0)
+                                or self._bucket_guess)
+        return self.bucket[key]
+
+    def double(self, label):
+        kind, name = label
+        if kind == "store":
+            self.store[name] *= 2
+        elif kind == "delta":
+            self.delta[name] *= 2
+        elif kind == "tail":
+            self.tail[name] *= 2
+        elif kind == "bucket":
+            self.bucket[name] *= 2
+        else:
+            self.join[name] *= 2
+
+    def memoize(self):
+        while len(_CAP_MEMO) >= _CAP_MEMO_LIMIT:
+            _CAP_MEMO.pop(next(iter(_CAP_MEMO)))
+        for pred, cap in self.store.items():
+            _CAP_MEMO[(self.fp, "store", pred)] = cap
+        for pred, cap in self.delta.items():
+            _CAP_MEMO[(self.fp, "delta", pred)] = cap
+        for pred, cap in self.tail.items():
+            _CAP_MEMO[(self.fp, "tail", pred)] = cap
+        for key, cap in self.join.items():
+            _CAP_MEMO[(self.fp, "join", key)] = cap
+        for key, cap in self.bucket.items():
+            _CAP_MEMO[(self.fp, "bucket", key)] = cap

@@ -31,8 +31,10 @@ def cell_id(arch, shape, multi_pod, tag=""):
 
 
 def run_glog_cell(multi_pod: bool, tag: str = "") -> dict:
-    """Dry-run of the paper's own workload: the distributed TG/SNE
-    materialization loop lowered on the production mesh."""
+    """Dry-run of the paper's own workload: ONE compiled TG round of the
+    distributed executor (delta exchange + planned join + absorb) lowered
+    on the production mesh.  (The executor is host-stepped — one such
+    program runs per round — so this is the unit the mesh compiles.)"""
     from repro.engine.distributed import DistConfig, lower_distributed_tc
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)

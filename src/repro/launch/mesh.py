@@ -52,3 +52,10 @@ def make_mesh_ctx(mesh) -> MeshCtx:
 def make_host_mesh(dp: int = 1, tp: int = 1):
     """Small mesh over however many local devices exist (tests/examples)."""
     return compat_make_mesh((dp, tp), ("data", "model"))
+
+
+def make_data_mesh(ndev: int | None = None):
+    """Pure data-parallel mesh for the sharded materializer: the first
+    ``ndev`` (default: all) local devices on the "data" axis."""
+    n = ndev if ndev is not None else len(jax.devices())
+    return compat_make_mesh((n, 1), ("data", "model"))

@@ -7,6 +7,10 @@ generated programs + bases:
 * two-phase engine: ``seminaive`` / ``tg`` / ``tg_noopt``,
 * ``tg_linear`` over a precomputed ``tglinear``/``minLinear`` EG,
 * the fused round executor (``REPRO_FUSED=1``),
+* the distributed shard_map executor (``backend="dist"``) — in-process over
+  however many local devices exist (1 in plain runs; the CI multi-device
+  leg forces 8), and in a forced-4-device subprocess, both with and without
+  capacity-overflow retries,
 
 under both kernel dispatch paths (``REPRO_USE_PALLAS=0/1``).
 
@@ -14,12 +18,20 @@ Programs are drawn two ways: seeded numpy generators that always run
 (deterministic everywhere), plus hypothesis-driven cases when hypothesis is
 installed (the CI dev extra).
 """
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
 
 from repro.core.chase import chase
-from repro.core.terms import Atom, Program, Rule, Var
+from repro.core.terms import Atom, Program, Rule, Var, parse_atom, parse_program
 from repro.core.tg_linear import min_linear, tglinear
+from repro.data.kb_sources import LUBM_L, RHO_DF, rho_df_facts
+from repro.engine import ops
 from repro.engine.materialize import EngineKB, materialize
 
 X, Y, Z = Var("X"), Var("Y"), Var("Z")
@@ -122,7 +134,6 @@ def test_differential_linear(seed, monkeypatch):
 
 def test_differential_transitive_closure(monkeypatch):
     """Deep fixpoint (the fused while_loop path) on both TC orientations."""
-    from repro.core.terms import parse_atom, parse_program
     rng = np.random.default_rng(7)
     edges = ([(i, i + 1) for i in range(20)]
              + [tuple(e) for e in rng.integers(0, 20, (10, 2))])
@@ -130,6 +141,187 @@ def test_differential_transitive_closure(monkeypatch):
     for text in ("e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)",
                  "e(X, Y) -> T(Y, X)\nT(Y, X) & e(Y, Z) -> T(Z, X)"):
         assert_all_engines_agree(parse_program(text), B, monkeypatch)
+
+
+# ---------------------------------------------------------------------------
+# distributed backend: decode_facts parity vs chase / seminaive / tg / fused
+# on LUBM-L, rho-df and TC (ndev = local devices in-process; forced 4-device
+# mesh in a subprocess)
+# ---------------------------------------------------------------------------
+TC_PROGRAM = "e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)"
+
+
+def _tc_base(n=16, chords=((9, 3), (5, 12))):
+    edges = [(i, i + 1) for i in range(n)] + list(chords)
+    return [parse_atom(f"e(v{a}, v{b})") for a, b in edges]
+
+
+def _mini_lubm_base():
+    """Trimmed university instance, small enough for the symbolic chase."""
+    A = Atom
+    return [A("subOrg", ("d0", "u0")), A("subOrg", ("g0", "d0")),
+            A("subOrg", ("d1", "u0")), A("subOrg", ("g1", "g0")),
+            A("fullProf", ("p0", "d0")), A("assocProf", ("p1", "d0")),
+            A("assistProf", ("p2", "d1")), A("lecturer", ("l0", "d1")),
+            A("headOf", ("p0", "d0")),
+            A("gradStudent", ("s0", "d0")), A("ugStudent", ("s1", "d1")),
+            A("teaches", ("p0", "c0")), A("teaches", ("p1", "c1")),
+            A("takes", ("s0", "c0")), A("takes", ("s1", "c0")),
+            A("advisor", ("s0", "p0")), A("publication", ("b0", "p0"))]
+
+
+def _mini_rho_df_base():
+    return rho_df_facts(n_classes=6, n_props=4, n_instances=8)
+
+
+def assert_dist_agrees(P, B, monkeypatch, max_rounds=MAX_ROUNDS):
+    """chase == seminaive == tg == fused == distributed on one instance."""
+    ch = chase(P, B, max_rounds=max_rounds)
+    assert ch.terminated
+    expected = set(ch.facts) | set(B)
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    monkeypatch.delenv("REPRO_DIST", raising=False)
+    for mode in ("seminaive", "tg"):
+        kb = EngineKB(P, B)
+        materialize(kb, mode=mode, max_rounds=max_rounds)
+        assert kb.decode_facts() == expected, mode
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb = EngineKB(P, B)
+    materialize(kb, mode="tg", max_rounds=max_rounds)
+    assert kb.decode_facts() == expected, "fused"
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    kbd = EngineKB(P, B)
+    st = materialize(kbd, mode="tg", max_rounds=max_rounds, backend="dist")
+    assert st.extra.get("dist") is True
+    assert kbd.decode_facts() == expected, "dist"
+    return st
+
+
+def test_differential_dist_tc(monkeypatch):
+    assert_dist_agrees(parse_program(TC_PROGRAM), _tc_base(), monkeypatch)
+
+
+def test_differential_dist_lubm(monkeypatch):
+    assert_dist_agrees(LUBM_L, _mini_lubm_base(), monkeypatch)
+
+
+def test_differential_dist_rhodf(monkeypatch):
+    assert_dist_agrees(RHO_DF, _mini_rho_df_base(), monkeypatch)
+
+
+def test_differential_dist_warm_no_retries(monkeypatch):
+    """Second run of a warmed program plans right first try: parity holds
+    with ZERO overflow retries (the 'without retries' leg)."""
+    P, B = parse_program(TC_PROGRAM), _tc_base()
+    assert_dist_agrees(P, B, monkeypatch)
+    ops.HOST_SYNC_STATS.reset()
+    st = assert_dist_agrees(P, B, monkeypatch)
+    assert ops.HOST_SYNC_STATS.dist_retries == 0
+    # one convergence pull per round, independent of the shard count
+    assert ops.HOST_SYNC_STATS.dist_pulls == st.rounds
+
+
+def test_differential_dist_forced_retries(monkeypatch):
+    """Parity must survive capacity-overflow retries: plant tiny exchange
+    buckets and 1-row delta buffers so early rounds overflow at any shard
+    count and the driver's double-and-retry loop has to converge (the
+    'with retries' leg)."""
+    from repro.engine import plan
+    monkeypatch.setattr(plan, "_CAP_MEMO", {})
+
+    def tiny_bucket(self, key):
+        if key not in self.bucket:
+            self.bucket[key] = 8
+        return self.bucket[key]
+
+    def tiny_delta(self, pred):
+        if pred not in self.delta:
+            self.delta[pred] = 1
+        return self.delta[pred]
+    monkeypatch.setattr(plan._Caps, "bucket_cap", tiny_bucket)
+    monkeypatch.setattr(plan._Caps, "delta_cap", tiny_delta)
+    ops.HOST_SYNC_STATS.reset()
+    assert_dist_agrees(parse_program(TC_PROGRAM), _tc_base(), monkeypatch)
+    assert ops.HOST_SYNC_STATS.dist_retries >= 1
+
+
+_DIST_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import sys, json
+    sys.path.insert(0, %r)
+    from repro.core.terms import parse_atom, parse_program
+    from repro.data.kb_sources import LUBM_L, RHO_DF, rho_df_facts
+    from repro.engine import ops
+    from repro.engine.materialize import EngineKB, materialize
+
+    TC = parse_program(%r)
+    B_tc = [parse_atom(f"e(v{i}, v{i+1})") for i in range(16)] + \\
+        [parse_atom("e(v9, v3)"), parse_atom("e(v5, v12)")]
+    lubm_base = [parse_atom(s) for s in %r]
+    scens = [("tc", TC, B_tc), ("lubm", LUBM_L, lubm_base),
+             ("rhodf", RHO_DF, rho_df_facts(n_classes=6, n_props=4,
+                                            n_instances=8))]
+    out = []
+    for name, P, B in scens:
+        kb1 = EngineKB(P, B)
+        materialize(kb1, mode="tg")
+        ops.HOST_SYNC_STATS.reset()
+        kb2 = EngineKB(P, B)
+        st = materialize(kb2, mode="tg", backend="dist")
+        out.append({"name": name, "ndev": st.extra["ndev"],
+                    "parity": kb1.decode_facts() == kb2.decode_facts(),
+                    "rounds": st.rounds,
+                    "pulls": ops.HOST_SYNC_STATS.dist_pulls,
+                    "retries": ops.HOST_SYNC_STATS.dist_retries})
+    # forced-overflow leg: tiny exchange buckets + 1-row delta buffers ->
+    # retries must fire at any shard count and converge
+    from repro.engine import plan
+    plan._CAP_MEMO.clear()
+    def tiny_bucket(self, key):
+        if key not in self.bucket:
+            self.bucket[key] = 8
+        return self.bucket[key]
+    def tiny_delta(self, pred):
+        if pred not in self.delta:
+            self.delta[pred] = 1
+        return self.delta[pred]
+    plan._Caps.bucket_cap = tiny_bucket
+    plan._Caps.delta_cap = tiny_delta
+    kb1 = EngineKB(TC, B_tc); materialize(kb1, mode="tg")
+    ops.HOST_SYNC_STATS.reset()
+    kb2 = EngineKB(TC, B_tc)
+    st = materialize(kb2, mode="tg", backend="dist")
+    out.append({"name": "tc_retry", "ndev": st.extra["ndev"],
+                "parity": kb1.decode_facts() == kb2.decode_facts(),
+                "rounds": st.rounds,
+                "pulls": ops.HOST_SYNC_STATS.dist_pulls,
+                "retries": ops.HOST_SYNC_STATS.dist_retries})
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def test_differential_dist_ndev4_subprocess():
+    """LUBM-L / rho-df / TC parity on a forced 4-shard mesh, with and
+    without overflow retries (subprocess: the forced device count must not
+    leak into this process)."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    lubm_strs = [repr(a) for a in _mini_lubm_base()]
+    script = _DIST_SUBPROC % (src, TC_PROGRAM, lubm_strs)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT ")][-1]
+    results = json.loads(line[len("RESULT "):])
+    assert len(results) == 4
+    for rec in results:
+        assert rec["ndev"] == 4, rec
+        assert rec["parity"], rec
+        # one scalar pull per round attempt, independent of ndev
+        assert rec["pulls"] == rec["rounds"] + rec["retries"], rec
+    assert results[-1]["name"] == "tc_retry" and results[-1]["retries"] >= 1
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,21 @@
-"""Distributed materialization (shard_map): correctness on a multi-device
-host mesh vs a python oracle.  Runs in a subprocess so the forced device
-count doesn't leak into other tests."""
+"""Distributed materialization (shard_map over the shared rule-plan IR):
+correctness on multi-device host meshes vs a python oracle, plus the
+general-executor contracts (env routing, fragment fallback, store
+invariant, one host pull per round).  Multi-device cases run in a
+subprocess so the forced device count doesn't leak into other tests."""
 import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
+import numpy as np
+
+from repro.core.terms import parse_atom, parse_program
+from repro.data.kb_sources import LUBM_LI, lubm_facts
+from repro.engine import ops
+from repro.engine.materialize import EngineKB, materialize
+from repro.engine.relation import lex_order
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -16,21 +24,20 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import sys, json
     sys.path.insert(0, %r)
-    import numpy as np, jax
-    from repro.engine.distributed import run_distributed_tc, DistConfig
-    from repro.launch.mesh import compat_make_mesh
+    import numpy as np
+    from repro.engine.distributed import run_distributed_tc
+    from repro.launch.mesh import make_data_mesh
 
     rng = np.random.default_rng(7)
     edges = np.unique(rng.integers(0, 40, (100, 2)).astype(np.int32), axis=0)
-    mesh = compat_make_mesh((4, 1), ("data", "model"))
-    cfg = DistConfig(shard_cap=1 << 12, delta_cap=1 << 10, bucket_cap=1 << 9)
-    t_store, count, triggers, rounds = run_distributed_tc(edges, mesh, cfg)
+    mesh = make_data_mesh(4)
+    rows, count, triggers, rounds = run_distributed_tc(edges, mesh)
 
     from collections import defaultdict
     adj = defaultdict(set)
     for a, b in edges:
         adj[a].add(b)
-    closure = set(map(tuple, edges))
+    closure = set(map(tuple, edges.tolist()))
     frontier = set(closure)
     while frontier:
         new = set()
@@ -40,8 +47,6 @@ SCRIPT = textwrap.dedent("""
                     new.add((x, z))
         closure |= new
         frontier = new
-    rows = np.asarray(t_store)
-    rows = rows[rows[:, 0] != np.iinfo(np.int32).max]
     got = set(map(tuple, rows.tolist()))
     print(json.dumps({"count": count, "expected": len(closure),
                       "match": got == {(int(a), int(b)) for a, b in closure},
@@ -57,3 +62,62 @@ def test_distributed_tc_4shards():
     assert out["match"], out
     assert out["count"] == out["expected"]
     assert out["triggers"] > 0 and out["rounds"] > 1
+
+
+def test_dist_general_program_inproc(monkeypatch):
+    """The general executor (not just TC): LUBM-LI parity on the local
+    mesh, with exactly one scalar pull per round attempt."""
+    monkeypatch.delenv("REPRO_DIST", raising=False)
+    B = lubm_facts(n_univ=1)
+    kb_ref = EngineKB(LUBM_LI, B)
+    materialize(kb_ref, mode="tg")
+    ops.HOST_SYNC_STATS.reset()
+    kb = EngineKB(LUBM_LI, B)
+    st = materialize(kb, mode="tg", backend="dist")
+    assert st.extra.get("dist") is True
+    assert kb.decode_facts() == kb_ref.decode_facts()
+    assert ops.HOST_SYNC_STATS.dist_pulls == \
+        st.rounds + ops.HOST_SYNC_STATS.dist_retries
+
+
+def test_dist_env_flag_routes(monkeypatch):
+    """REPRO_DIST=1 selects the sharded backend without a backend arg."""
+    monkeypatch.setenv("REPRO_DIST", "1")
+    TC = parse_program("e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    kb = EngineKB(TC, [parse_atom(f"e(v{i}, v{i+1})") for i in range(6)])
+    st = materialize(kb, mode="tg")
+    assert st.extra.get("dist") is True
+    assert kb.rels["T"].count == 6 * 7 // 2
+
+
+def test_dist_falls_back_outside_fragment(monkeypatch):
+    """Existential rules are outside the plannable fragment: the dist
+    backend declines and the two-phase executor produces the facts."""
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    P = parse_program("""
+        p(X, Y) -> Q(X, Y)
+        Q(X, Y) & Q(Y, Z) -> exists W. Q(Z, W)
+    """)
+    B = [parse_atom("p(a, b)"), parse_atom("p(b, c)")]
+    kb_ref = EngineKB(P, B)
+    materialize(kb_ref, mode="tg", max_rounds=5)
+    kb = EngineKB(P, B)
+    st = materialize(kb, mode="tg", max_rounds=5, backend="dist")
+    assert st.extra.get("dist") is None
+    assert kb.decode_facts() == kb_ref.decode_facts()
+
+
+def test_dist_store_invariant(monkeypatch):
+    """Distributed stores fold back lexsorted, compacted, set-semantic."""
+    monkeypatch.delenv("REPRO_DIST", raising=False)
+    TC = parse_program("e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    B = [parse_atom(f"e(v{i}, v{i+1})") for i in range(10)] + \
+        [parse_atom("e(v6, v2)"), parse_atom("e(v3, v3)")]
+    kb = EngineKB(TC, B)
+    materialize(kb, mode="tg", backend="dist")
+    for pred, rel in kb.rels.items():
+        assert rel.sorted_by == lex_order(rel.arity), pred
+        rows = rel.np_rows()
+        order = np.lexsort(rows.T[::-1])
+        assert (order == np.arange(len(rows))).all(), pred
+        assert len(rel.rows_set()) == rel.count, pred
