@@ -1,16 +1,29 @@
 """Distributed-executor scaling table — the trajectory behind
 ``BENCH_dist.json``.
 
-Runs TC (deep chain + chords) and LUBM-L through the sharded shard_map
-executor at ndev in {1, 2, 4, 8} (smoke: {1, 2}).  Each shard count runs in
-a subprocess (``xla_force_host_platform_device_count`` is locked at first
-jax init, so the parent process can't revisit it), warms once so the
-capacity planner converges, then times a steady-state run.
+Runs deep-chain TC (the O(rounds)-vs-O(phases) host-sync scenario), a wide
+random-graph TC (few rounds, big per-round joins — the scenario where
+sharding the sort/merge work pays off), and LUBM-L through the sharded
+shard_map executor at ndev in {1, 2, 4, 8} (smoke: {1, 2}).  Each shard
+count runs in a subprocess (``xla_force_host_platform_device_count`` is
+locked at first jax init, so the parent process can't revisit it), warms
+until the capacity planner is stable (no cap in ``plan._CAP_MEMO`` moved on
+the last run — the while_loop fixpoint doubles tails geometrically, so two
+fixed warm passes are not enough), then times a steady-state run.
 
-Reported per row: wall time, derived/total facts, rounds, triggers, the
-single-device ``tg`` reference fact count (``parity`` must be 1), and the
-host-sync counters — ``pulls_per_round`` is the acceptance metric: ONE
-blocking convergence pull per round attempt, independent of ndev.
+Every subprocess also times the fused single-device executor
+(``REPRO_FUSED=1``) on the same instance under the same warm discipline: it
+is both the parity reference and the baseline behind ``speedup_vs_fused``
+(fused seconds / dist seconds, same process so thread conditions match).
+The ndev=1 subprocess additionally emits one ``dist.fused_base.*`` row per
+scenario so the baseline wall time lands in the table.
+
+Reported per dist row: wall time, derived/total facts, rounds, triggers,
+parity vs fused, ``speedup_vs_fused``, and the host-sync counters —
+``pulls_per_round`` is the acceptance metric (the while_loop fixpoint pulls
+once per *phase exit*, so deep-chain TC must sit well under one pull per
+round), with ``dist_fixpoint_pulls`` / ``dist_fixpoint_iters`` splitting
+out how much of the run stayed on-device.
 """
 from __future__ import annotations
 
@@ -30,41 +43,59 @@ _SCRIPT = textwrap.dedent("""
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import sys, json, time
     sys.path.insert(0, %(src)r)
-    from repro.core.terms import parse_atom, parse_program
-    from repro.data.kb_sources import LUBM_L, lubm_facts
-    from repro.engine import ops
+    from repro.data.kb_sources import (TC, LUBM_L, lubm_facts,
+                                       tc_chain_facts, tc_random_facts)
+    from repro.engine import ops, plan
     from repro.engine.materialize import EngineKB, materialize
 
     smoke = %(smoke)r
-    TC = parse_program("e(X, Y) -> T(X, Y)\\nT(X, Y) & e(Y, Z) -> T(X, Z)")
-    n_chain = 48 if smoke else 128
-    B_tc = [parse_atom(f"e(v{i}, v{i+1})") for i in range(n_chain)] + \\
-        [parse_atom(f"e(v{3*i+2}, v{i})") for i in range(n_chain // 8)]
-    scens = [("tc", TC, B_tc),
-             ("LUBM-L", LUBM_L, lubm_facts(n_univ=1 if smoke else 2))]
-    out = []
-    for name, P, B in scens:
-        ref = EngineKB(P, B)
-        materialize(ref, mode="tg")
-        # warm TWICE: the first pass converges the capacity planner, the
-        # second compiles every round at the converged buckets — the timed
-        # run then measures steady state (same discipline as bench_fused)
-        for _ in range(2):
+    scens = [
+        ("tc_chain", TC, tc_chain_facts(48 if smoke else 128)),
+        ("tc_rand", TC, tc_random_facts(*((200, 600) if smoke
+                                          else (500, 1500)))),
+    ]
+    if not smoke:  # the rule-heavy scenario: cold compiles dominate, so
+        scens.append(  # it rides only the full table, not the CI smoke
+            ("LUBM-L", LUBM_L, lubm_facts(n_univ=2, scale=2)))
+
+    def steady(P, B, run, max_warm=5):
+        # warm until no planned capacity moved on the last run: the timed
+        # pass then hits only cached programs at converged buffer sizes
+        prev = None
+        for _ in range(max_warm):
             kb = EngineKB(P, B)
-            materialize(kb, mode="tg", backend="dist")
+            run(kb)
+            snap = sorted((str(k), v) for k, v in plan._CAP_MEMO.items())
+            if snap == prev:
+                break
+            prev = snap
         ops.HOST_SYNC_STATS.reset()
         kb = EngineKB(P, B)
         t0 = time.perf_counter()
-        st = materialize(kb, mode="tg", backend="dist")
-        t = time.perf_counter() - t0
+        st = run(kb)
+        return time.perf_counter() - t0, st, kb
+
+    out = []
+    for name, P, B in scens:
+        os.environ["REPRO_FUSED"] = "1"
+        t_f, st_f, kb_f = steady(P, B, lambda kb: materialize(kb, mode="tg"))
+        del os.environ["REPRO_FUSED"]
+        fused = {"name": name, "seconds": t_f, "facts": kb_f.num_facts(),
+                 "derived": st_f.derived, "rounds": st_f.rounds,
+                 "fused_pulls": ops.HOST_SYNC_STATS.fused_pulls}
+        t_d, st, kb = steady(
+            P, B, lambda kb: materialize(kb, mode="tg", backend="dist"))
+        s = ops.HOST_SYNC_STATS
         out.append({
-            "name": name, "seconds": t, "ndev": st.extra["ndev"],
+            "name": name, "seconds": t_d, "ndev": st.extra["ndev"],
             "derived": st.derived, "facts": kb.num_facts(),
             "rounds": st.rounds, "triggers": st.triggers,
-            "facts_ref": ref.num_facts(),
-            "parity": int(kb.num_facts() == ref.num_facts()),
-            "dist_pulls": ops.HOST_SYNC_STATS.dist_pulls,
-            "dist_retries": ops.HOST_SYNC_STATS.dist_retries})
+            "facts_ref": kb_f.num_facts(),
+            "parity": int(kb.num_facts() == kb_f.num_facts()),
+            "dist_pulls": s.dist_pulls, "dist_retries": s.dist_retries,
+            "dist_fixpoint_pulls": s.dist_fixpoint_pulls,
+            "dist_fixpoint_iters": s.dist_fixpoint_iters,
+            "fused": fused})
     print("RESULT " + json.dumps(out))
 """)
 
@@ -81,6 +112,12 @@ def run(smoke: bool = False):
         line = [ln for ln in r.stdout.splitlines()
                 if ln.startswith("RESULT ")][-1]
         for rec in json.loads(line[len("RESULT "):]):
+            fused = rec["fused"]
+            if ndev == scales[0]:
+                emit(f"dist.fused_base.{fused['name']}", fused["seconds"],
+                     fused["derived"], facts=fused["facts"],
+                     rounds=fused["rounds"],
+                     fused_pulls=fused["fused_pulls"])
             emit(f"dist.{rec['name']}.ndev{ndev}", rec["seconds"],
                  rec["derived"],
                  ndev=rec["ndev"], facts=rec["facts"],
@@ -88,8 +125,12 @@ def run(smoke: bool = False):
                  rounds=rec["rounds"], triggers=rec["triggers"],
                  dist_pulls=rec["dist_pulls"],
                  dist_retries=rec["dist_retries"],
+                 dist_fixpoint_pulls=rec["dist_fixpoint_pulls"],
+                 dist_fixpoint_iters=rec["dist_fixpoint_iters"],
                  pulls_per_round=round(rec["dist_pulls"]
-                                       / max(rec["rounds"], 1), 3))
+                                       / max(rec["rounds"], 1), 3),
+                 speedup_vs_fused=round(fused["seconds"]
+                                        / max(rec["seconds"], 1e-9), 3))
 
 
 if __name__ == "__main__":

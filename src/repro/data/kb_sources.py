@@ -219,6 +219,35 @@ def rho_df_facts(n_classes: int = 40, n_props: int = 15,
 
 
 # ---------------------------------------------------------------------------
+# transitive closure — the canonical deep-fixpoint / exchange-heavy scenarios
+# ---------------------------------------------------------------------------
+TC = parse_program("""
+    e(X, Y) -> T(X, Y)
+    T(X, Y) & e(Y, Z) -> T(X, Z)
+""")
+
+
+def tc_chain_facts(n_chain: int = 128, chord_every: int = 8):
+    """Deep-chain TC base: an ``n_chain``-edge path plus sparse back-chords
+    (``(3i+2, i)`` every ``chord_every`` nodes).  The closure needs
+    O(n_chain) rounds — the scenario that separates O(phases) host sync
+    from O(rounds)."""
+    edges = [(i, i + 1) for i in range(n_chain)] + \
+        [(3 * i + 2, i) for i in range(n_chain // chord_every)]
+    return [Atom("e", (f"v{a}", f"v{b}")) for a, b in edges]
+
+
+def tc_random_facts(n_nodes: int = 400, n_edges: int = 1200, seed: int = 3):
+    """Wide random-graph TC base: few rounds, large joins and deltas, so
+    the per-round exchange/join cost — not the round count — dominates
+    (the scenario where sharding the sort/merge work pays off)."""
+    rng = np.random.default_rng(seed)
+    edges = np.unique(
+        rng.integers(0, n_nodes, (n_edges, 2)).astype(np.int64), axis=0)
+    return [Atom("e", (f"v{a}", f"v{b}")) for a, b in edges.tolist()]
+
+
+# ---------------------------------------------------------------------------
 # linear scenarios (LI) helper: the linear sub-programs
 # ---------------------------------------------------------------------------
 def linear_subset(program):
@@ -233,4 +262,7 @@ SCENARIOS = {
     "CHASEBENCH": (CHASEBENCH, lambda scale: chasebench_facts(n=100 * scale)),
     "RHO-DF": (RHO_DF, lambda scale: rho_df_facts(
         n_classes=20 * scale, n_instances=300 * scale)),
+    "TC-CHAIN": (TC, lambda scale: tc_chain_facts(n_chain=64 * scale)),
+    "TC-RAND": (TC, lambda scale: tc_random_facts(
+        n_nodes=200 * scale, n_edges=600 * scale)),
 }

@@ -30,19 +30,33 @@ its static signature) that:
   3. reduces convergence scalars with ``psum``: per-pred fresh-fact totals,
      the trigger total, and the overflow vector.
 
-The host pulls exactly one scalar bundle per round
-(``HOST_SYNC_STATS.dist_pulls``) regardless of the shard count — the
-per-round host-sync cost is independent of ``ndev``.  Overflow follows the
-planner contract from ``repro.engine.plan``: every planned capacity (store /
-delta / join / exchange bucket, all per shard) carries an in-program flag;
-when any fires the round's outputs are discarded, the host doubles exactly
-the overflowed buckets, recompiles, and retries the same round
-(``HOST_SYNC_STATS.dist_retries``).
+The host pulls exactly one scalar bundle per round attempt
+(``HOST_SYNC_STATS.dist_pulls``) regardless of the shard count — and, once
+the remaining program is *linear* (``plan._linear_tail``), the driver stops
+stepping rounds from the host at all: the whole fixpoint phase compiles to
+ONE ``lax.while_loop``-under-``shard_map`` program
+(:func:`_build_dist_fixpoint`) whose convergence check is an on-device
+``psum`` folded into the loop carry.  The host then pulls once per
+*phase exit* (``HOST_SYNC_STATS.dist_fixpoint_pulls``) — fixpoint reached,
+a tail buffer filled (fold, double, resume), or a capacity overflow — instead of
+once per round, which is what makes ``dist_pulls`` O(phases) rather than
+O(rounds).  Inside the loop, communication overlaps compute: the delta
+exchange feeding iteration k+1 is issued at the end of iteration k
+(software-pipelined through the carry, dependency-free of the tail merges,
+so XLA can run the ``all_to_all`` concurrently with the merge arithmetic),
+loop-invariant store-side exchanges are hoisted out of the loop entirely,
+and the Def. 23 pre-restriction routing rides the same overlapped window
+when it sits on the delta atom.  ``REPRO_DIST_FIXPOINT=0`` forces the
+host-stepped per-round path for A/B comparison.
 
-Known trade-off: the route hook re-exchanges BOTH sides of every join each
-round, including round-invariant store sides — correctness-first; a future
-PR can cache per-(pred, join-col) routed copies of static inputs so only
-deltas move (the architecture this module exists to enable).
+Overflow follows the planner contract from ``repro.engine.plan``: every
+planned capacity (store / delta / tail / join / exchange bucket, all per
+shard) carries an in-program flag; when any fires the round's (or loop
+iteration's) outputs are rolled back to the last good state, the host
+doubles exactly the overflowed buckets, recompiles, and retries — a
+host-stepped round retry counts in ``HOST_SYNC_STATS.dist_retries``, while
+fixpoint-phase capacity retries and tail folds surface as extra
+``dist_fixpoint_pulls``, so the two causes stay distinguishable.
 
 Pallas routing is pinned off here: the kernels are not shard_map-
 transformable in interpret mode.
@@ -65,9 +79,11 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.engine import ops
 from repro.engine.plan import (_MAX_RETRIES, _absorb_traced, _cached_program,
-                               _Caps, _exec_rule_traced, compile_rule_plan,
+                               _Caps, _exec_rule_traced, _linear_tail,
+                               _select_state, compile_rule_plan,
                                program_fingerprint)
 from repro.engine.relation import PAD, Relation, lex_order
+from repro.launch.mesh import axis_size
 
 _NP_PAD = np.iinfo(np.int32).max
 
@@ -115,17 +131,25 @@ def np_tuple_hash(rows: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # fixed-capacity bucket exchange
 # ---------------------------------------------------------------------------
-def _route_to_buckets(rows, target, ndev, bucket_cap):
+def _route_to_buckets(rows, target, ndev, bucket_cap, sort_cols=None):
     """Pure bucketization half of ``_exchange`` (property-tested on its
     own): scatter rows into per-destination buckets of ``bucket_cap`` rows,
     preserving input order within each bucket (``argsort`` is stable).
     Invalid (PAD) rows are discarded; valid rows beyond a destination's
-    capacity are counted.  Returns ((ndev, bucket_cap, ar) buckets,
-    overflow_count)."""
+    capacity are counted.  With ``sort_cols`` (a column sequence) the
+    within-bucket order becomes lexicographic by those columns instead of
+    input order — one composite (destination, cols...) lexsort, no costlier
+    than the plain destination argsort, which hands every receiver
+    pre-sorted runs (see ``_merge_runs``).  Returns ((ndev, bucket_cap, ar)
+    buckets, overflow_count)."""
     cap, ar = rows.shape
     valid = rows[:, 0] != PAD
     target = jnp.where(valid, target, ndev)          # invalid -> trash bucket
-    order = jnp.argsort(target)
+    if sort_cols is None:
+        order = jnp.argsort(target)
+    else:                 # lexsort: LAST key is primary -> target, then cols
+        order = jnp.lexsort(tuple(rows[:, c] for c in reversed(sort_cols))
+                            + (target,))
     t_sorted = target[order]
     rows_sorted = rows[order]
     pos = jnp.arange(cap) - jnp.searchsorted(t_sorted, t_sorted, side="left")
@@ -140,15 +164,77 @@ def _route_to_buckets(rows, target, ndev, bucket_cap):
             jnp.sum(overflow))
 
 
-def _exchange(rows, target, ndev, axis, bucket_cap):
+def _exchange(rows, target, ndev, axis, bucket_cap, sort_cols=None):
     """Fixed-capacity bucket exchange: rows (cap, ar) with target shard ids;
     rows routed via all_to_all; returns ((ndev*bucket_cap, ar) local rows,
     dropped_count) — overflowed rows are counted, so the driver can retry
-    with bigger buckets."""
-    buckets, overflow = _route_to_buckets(rows, target, ndev, bucket_cap)
+    with bigger buckets.  ``sort_cols`` orders each bucket by those columns
+    before sending (``_route_to_buckets``), so the received block is
+    ``ndev`` front-packed sorted runs."""
+    buckets, overflow = _route_to_buckets(rows, target, ndev, bucket_cap,
+                                          sort_cols=sort_cols)
     recv = jax.lax.all_to_all(buckets, axis, split_axis=0, concat_axis=0,
                               tiled=True)
     return recv.reshape(ndev * bucket_cap, rows.shape[1]), overflow
+
+
+_MERGE_MAX_WAYS = 4      # ndev**2 pairwise rank probes beat a sort up to here
+
+
+def _merge_runs(blk, ndev, perm):
+    """Merge the ``ndev`` per-source sorted runs of an exchanged block into
+    one front-packed block lexsorted in ``perm`` column order (``perm`` is
+    the full column permutation the sender sorted by, key columns first).
+
+    The sender's composite bucketize sort already ordered every bucket, so
+    the receiver only has to merge: a rank-based k-way merge — each row's
+    output slot is its index within its run plus one ``searchsorted`` count
+    against every other run (ties broken by source-run index, so slots are
+    unique), landed with a single scatter.  That is ndev*(ndev-1) binary
+    searches over packed keys instead of an O(n log n) re-sort of the whole
+    block; at ndev=1 the block is already fully sorted and nothing runs at
+    all.  Past ``_MERGE_MAX_WAYS`` runs (or rows too wide to pack) the
+    quadratic probe count loses to XLA's sort, so it falls back to one full
+    lexsort — same contract, no pre-sorted-run benefit."""
+    n, ar = blk.shape
+    identity = tuple(perm) == tuple(range(ar))
+    if ndev == 1:
+        return blk
+    cap = n // ndev
+    rot = blk if identity else blk[:, list(perm)]
+    if ndev > _MERGE_MAX_WAYS or ar > 2 or (ar == 2 and not ops._pack_ok()):
+        out = ops.lexsort_core(rot, pallas=False)
+    else:
+        runs = [rot[i * cap:(i + 1) * cap] for i in range(ndev)]
+        valids = [blk[i * cap:(i + 1) * cap, 0] != PAD for i in range(ndev)]
+        iota = jnp.arange(cap, dtype=jnp.int32)
+        with jax.experimental.enable_x64():
+            keys = ([r[:, 0] for r in runs] if ar == 1
+                    else [ops.pack_rows2(r) for r in runs])
+            ranks = []
+            for i in range(ndev):
+                rank = iota
+                for j in range(ndev):
+                    if j == i:
+                        continue
+                    # right for earlier runs / left for later ones: equal
+                    # rows order by source run, making every slot unique
+                    rank = rank + jnp.searchsorted(
+                        keys[j], keys[i],
+                        side="right" if j < i else "left").astype(jnp.int32)
+                ranks.append(rank)
+        out = jnp.full((n + 1, ar), PAD, jnp.int32)
+        for i, r in enumerate(runs):
+            pos = jnp.where(valids[i], ranks[i], n)    # PAD rows -> trash
+            out = out.at[pos].set(jnp.where(valids[i][:, None], r, PAD),
+                                  mode="drop")
+        out = out[:n]
+    if identity:
+        return out
+    inv = [0] * ar
+    for i, c in enumerate(perm):
+        inv[c] = i
+    return out[:, inv]
 
 
 @dataclass(frozen=True)
@@ -160,13 +246,6 @@ class DistConfig:
     bucket_cap: int = 1 << 9         # per-destination exchange bucket
     max_rounds: int = 64
     axis: tuple = ("data",)          # mesh axes facts are partitioned over
-
-
-def _axis_size(mesh, axis):
-    n = 1
-    for a in (axis if isinstance(axis, tuple) else (axis,)):
-        n *= mesh.shape[a]
-    return n
 
 
 # ---------------------------------------------------------------------------
@@ -250,7 +329,7 @@ def _build_dist_round(mesh, axis, ndev, preds, caps, active, delta_in,
                 tgt = (_cols_hash(rows, cols)
                        % jnp.uint32(ndev)).astype(jnp.int32)
                 out, dropped = _exchange(rows, tgt, ndev, axis, cap)
-                return out, [dropped > 0]
+                return out, [dropped > 0], None
             inputs = [deltas[bp] if j == jd else stores[bp]
                       for j, bp in enumerate(plan.body_preds)]
             pre_data = stores[plan.head_pred] if use_prefilter else None
@@ -304,6 +383,378 @@ def _build_dist_round(mesh, axis, ndev, preds, caps, active, delta_in,
     fn = jax.jit(shard_map(body, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs))
     return fn, ovf_labels, derived
+
+
+# ---------------------------------------------------------------------------
+# compiled linear-tail fixpoint program (lax.while_loop under shard_map)
+# ---------------------------------------------------------------------------
+def _site_route_tag(plan, jd, use_pre):
+    """The exchange tag through which one linear-fixpoint site's DELTA
+    first flows — the exchange that gets software-pipelined through the
+    loop carry — or None when the site routes nothing delta-side
+    (single-atom rule without a usable pre-restriction: its heads only
+    move in the absorb exchange)."""
+    if use_pre and plan.pre is not None and plan.pre[0] == jd:
+        return ("pre", jd)
+    if len(plan.atoms) == 1:
+        return None
+    return ("jl", 1) if jd == 0 else ("jr", jd)
+
+
+def _site_tags(plan, jd, use_pre):
+    """Exchange tags of one linear-fixpoint site (plan with the delta at
+    body position ``jd``), in the exact order ``_exec_rule_traced``
+    reaches them.  Returns ``(carried_tag, [(tag, kind, key_cols)])``
+    where kind is:
+
+    * ``'carried'`` — the first delta-side exchange: its routed block is
+      produced at the END of the previous loop iteration (right after the
+      fresh delta materializes, with no dependency on the tail merges, so
+      the ``all_to_all`` overlaps them) and rides the loop carry,
+    * ``'static'`` — routes a loop-invariant store input: hoisted out of
+      the loop and exchanged once per fixpoint attempt,
+    * ``'live'`` — routes delta-derived rows mid-chain: stays in-loop.
+    """
+    pre_j = plan.pre[0] if (use_pre and plan.pre is not None) else None
+    carried = _site_route_tag(plan, jd, use_pre)
+    tags = []
+    for j in range(len(plan.atoms)):
+        if pre_j == j:
+            kind = "carried" if ("pre", j) == carried else "static"
+            tags.append((("pre", j), kind, plan.pre[1]))
+        if j >= 1:
+            lk, rk, _ = plan.joins[j - 1]
+            if ("jl", j) == carried:
+                kind = "carried"
+            elif j == 1 and jd >= 1 and pre_j != 0:
+                kind = "static"        # left side of join 1 is a store
+            else:
+                kind = "live"
+            tags.append((("jl", j), kind, (lk,)))
+            if ("jr", j) == carried:
+                kind = "carried"
+            elif j != jd and pre_j != j:
+                kind = "static"        # right side is an unfiltered store
+            else:
+                kind = "live"
+            tags.append((("jr", j), kind, (rk,)))
+    return carried, tags
+
+
+def _fix_ovf_labels(active, use_pre, derived):
+    """Overflow labels of the fixpoint program, partitioned into its three
+    emission groups: *body* (in-loop flags, in traced emission order: live
+    exchanges + join caps per site, then absorb-bucket / delta / tail per
+    derived pred), *production* (the carried delta-side exchanges, one per
+    site that has one, in site order — emitted in-loop after the absorbs),
+    and *static* (the hoisted store-side exchanges, emitted once before
+    the loop).  The program's overflow vector is body ++ production ++
+    static."""
+    body, production, static = [], [], []
+    for plan, jd in active:
+        _, tags = _site_tags(plan, jd, use_pre)
+        for tag, kind, _cols in tags:
+            label = ("bucket", (plan.key, *tag))
+            {"live": body, "carried": production,
+             "static": static}[kind].append(label)
+            if tag[0] == "jr":
+                body.append(("join", (plan.key, tag[1] - 1)))
+    for pred in derived:
+        body += [("bucket", ("absorb", pred)), ("delta", pred),
+                 ("tail", pred)]
+    return body, production, static
+
+
+def _dist_fix_signature(mesh, axis, ndev, s_preds, o_preds, caps, active,
+                        use_prefilter, max_rounds):
+    derived = tuple(sorted({plan.head_pred for plan, _ in active}))
+    body, prod, static = _fix_ovf_labels(active, use_prefilter, derived)
+    bkeys = tuple(name for kind, name in body + prod + static
+                  if kind == "bucket")
+    return ("dist_fix", mesh, axis, ndev, s_preds, o_preds,
+            tuple(caps.store[p] for p in s_preds + o_preds),
+            tuple(caps.delta_cap(p) for p in s_preds),
+            tuple(caps.tail_cap(p) for p in s_preds),
+            tuple((plan.key, jd, tuple(caps.join_cap(plan, i)
+                                       for i in range(len(plan.joins))))
+                  for plan, jd in active),
+            tuple((k, caps.bucket_cap(k)) for k in bkeys),
+            use_prefilter, max_rounds)
+
+
+def _build_dist_fixpoint(mesh, axis, ndev, s_preds, o_preds, caps, active,
+                         use_prefilter, max_rounds):
+    """The remaining (linear) fixpoint as ONE sharded program: a
+    ``lax.while_loop`` whose body is a whole distributed round, with the
+    convergence check folded into the carry as on-device ``psum``s — zero
+    host pulls until fixpoint, overflow, or ``max_rounds``.
+
+    Cross-shard termination uniformity: everything the loop condition
+    reads (live count, round counter, overflow vector) is psum'd in the
+    body, so every shard takes the same branch each iteration (a
+    collective in the condition itself would be illegal).
+
+    The round body mirrors the fused fixpoint (phase-entry stores as loop
+    constants, per-pred sorted tail buffers, probe store | tail, last-good
+    rollback on overflow via ``_select_state``) with the distributed
+    exchanges layered on per ``_site_tags``: static store-side routes are
+    hoisted above the loop, the delta-side route is software-pipelined —
+    iteration k closes by sort-bucketizing + exchanging + run-merging the
+    delta it just produced, a computation independent of its tail merges, and
+    the routed block enters iteration k+1 through the carry (the
+    compute/comm-overlap window; the Def. 23 pre-restriction's
+    projected-head-hash routing rides it whenever the pre-restriction
+    sits on the delta atom).
+
+    Exits return per-shard tails + counts, per-shard deltas + counts, and
+    the psum'd rounds / triggers / derived / overflow scalars; the host
+    folds tails into the store shards, doubles exactly the overflowed
+    capacities, and resumes mid-fixpoint."""
+    derived = tuple(sorted({plan.head_pred for plan, _ in active}))
+    body_labels, prod_labels, static_labels = _fix_ovf_labels(
+        active, use_prefilter, derived)
+    ovf_labels = body_labels + prod_labels + static_labels
+    n_body, n_static = len(body_labels), len(static_labels)
+    sites = []
+    carried_slot = {}                  # site index -> carry tuple slot
+    site_cols = {}                     # site index -> carried key cols
+    site_skey = {}                     # site index -> static sort key
+    for plan, jd in active:
+        carried, tags = _site_tags(plan, jd, use_prefilter)
+        si = len(sites)
+        if carried is not None:
+            carried_slot[si] = len(carried_slot)
+            cols = next(c for t, _k, c in tags if t == carried)
+            site_cols[si] = cols
+            # join-side blocks are pre-sorted by the join key at
+            # production time (inside the overlap window), so the in-loop
+            # chain skips its keysort; pre-restriction blocks are probed,
+            # not joined, and need no order
+            site_skey[si] = cols[0] if carried[0] != "pre" else None
+        sites.append((plan, jd, carried, tags))
+    join_caps = {id(plan): tuple(caps.join_cap(plan, i)
+                                 for i in range(len(plan.joins)))
+                 for plan, _ in active}
+    delta_caps = {p: caps.delta_cap(p) for p in s_preds}
+    tail_caps = {p: caps.tail_cap(p) for p in s_preds}
+    bucket_caps = {name: caps.bucket_cap(name)
+                   for kind, name in ovf_labels if kind == "bucket"}
+
+    def exch(rows, cols, key, sort=False):
+        tgt = (_cols_hash(rows, cols) % jnp.uint32(ndev)).astype(jnp.int32)
+        if not sort:
+            out, dropped = _exchange(rows, tgt, ndev, axis, bucket_caps[key])
+            return out, dropped > 0
+        # sorted exchange: the sender lexsorts each bucket by (cols, rest)
+        # inside the composite bucketize sort, the receiver tree-merges the
+        # ndev runs — log2(ndev) linear passes replace the post-exchange
+        # O(n log n) keysort, and the merged block satisfies the join's
+        # skey contract (sorted by cols[0])
+        perm = tuple(cols) + tuple(c for c in range(rows.shape[1])
+                                   if c not in cols)
+        out, dropped = _exchange(rows, tgt, ndev, axis, bucket_caps[key],
+                                 sort_cols=perm)
+        return _merge_runs(out, ndev, perm), dropped > 0
+
+    def filt(plan, j, data):
+        """Atom-j filters on a raw block (production-side routing must see
+        the same rows the in-loop chain would route)."""
+        eq, consts = plan.atoms[j]
+        if eq or consts:
+            mask = ops.filter_mask_core(data, eq, consts)
+            data = ops.compact_core(data, mask, data.shape[0])
+        return data
+
+    def fn(s_datas, d_datas, o_datas, rounds0):
+        base = dict(zip(s_preds, s_datas))
+        others = dict(zip(o_preds, o_datas))
+        deltas0 = dict(zip(s_preds, d_datas))
+
+        def not_seen(rows, pred, tails, cols=None):
+            """keep-mask: rows whose (projected) tuple is in neither the
+            phase-entry store shard nor the tail shard of ``pred`` —
+            callers route rows by the projected tuple's hash first, so
+            the canonical-home shard answers membership locally."""
+            sel = rows if cols is None else ops.project_core(rows, cols)
+            seen = jnp.logical_or(
+                ops.member_mask_core(sel, base[pred]),
+                ops.member_mask_core(sel, tails[pred]))
+            valid = rows[:, 0] != PAD
+            return jnp.logical_and(valid, jnp.logical_not(seen))
+
+        # hoisted loop-invariant store-side exchanges: routed (and
+        # key-sorted) once per fixpoint attempt, loop constants thereafter
+        static_routed = {}
+        static_flags = []
+        for plan, jd, carried, tags in sites:
+            for tag, kind, cols in tags:
+                if kind != "static":
+                    continue
+                src_j = 0 if tag[0] == "jl" else tag[1]
+                blk, flag = exch(filt(plan, src_j,
+                                      others[plan.body_preds[src_j]]),
+                                 cols, (plan.key, *tag),
+                                 sort=tag[0] != "pre")
+                skey = cols[0] if tag[0] != "pre" else None
+                static_routed[(id(plan), tag)] = (blk, skey)
+                static_flags.append(flag)
+
+        def produce_carried(si, plan, jd, carried, fresh_delta):
+            """The overlapped production of one site's next-iteration
+            input: filter + sorted-exchange the fresh delta (pre-restriction
+            blocks are probed, not joined, so they skip the sort)."""
+            return exch(filt(plan, jd, fresh_delta), site_cols[si],
+                        (plan.key, *carried), sort=site_skey[si] is not None)
+
+        carried0, prod_flags = [], []
+        for si, (plan, jd, carried, tags) in enumerate(sites):
+            if carried is None:
+                continue
+            blk, flag = produce_carried(si, plan, jd, carried,
+                                        deltas0[plan.body_preds[jd]])
+            carried0.append(blk)
+            prod_flags.append(flag)
+
+        init_flags = prod_flags + static_flags
+        ovf0 = jnp.concatenate([
+            jnp.zeros((n_body,), jnp.int32),
+            (jax.lax.psum(jnp.stack(init_flags).astype(jnp.int32), axis)
+             if init_flags else jnp.zeros((0,), jnp.int32))])
+        d_counts0 = tuple(jnp.sum(deltas0[p][:, 0] != PAD).astype(jnp.int32)
+                          for p in s_preds)
+        live0 = jax.lax.psum(sum(d_counts0), axis)
+
+        def body(state):
+            (w_datas, w_counts, d_datas, d_counts, carried_blks, rounds,
+             trg, drv, live, _ovf) = state
+            tails = dict(zip(s_preds, w_datas))
+            wcnt = dict(zip(s_preds, w_counts))
+            deltas = dict(zip(s_preds, d_datas))
+            triggers = jnp.zeros((), jnp.int32)
+            ovfs = []
+            heads = {}
+            for si, (plan, jd, carried, tags) in enumerate(sites):
+                def route(rows, cols, tag, _plan=plan, _carried=carried,
+                          _si=si):
+                    if tag == _carried:
+                        return (carried_blks[carried_slot[_si]], [],
+                                site_skey[_si])
+                    hit = static_routed.get((id(_plan), tag))
+                    if hit is not None:
+                        return hit[0], [], hit[1]
+                    # live tags are always join sides (_site_tags never
+                    # marks a pre tag live), so the sorted exchange lets
+                    # the chain skip its keysort too
+                    out, flag = exch(rows, cols, (_plan.key, *tag),
+                                     sort=True)
+                    return out, [flag], cols[0]
+
+                inputs = [deltas[bp] if j == jd else others[bp]
+                          for j, bp in enumerate(plan.body_preds)]
+                pf = ((lambda rows, cols, p=plan.head_pred:
+                       not_seen(rows, p, tails, cols))
+                      if use_prefilter and plan.pre is not None else None)
+                head, t, flags = _exec_rule_traced(
+                    plan, inputs, None, join_caps[id(plan)], False,
+                    prefilter=pf, route=route)
+                triggers += t
+                ovfs += flags
+                heads.setdefault(plan.head_pred, []).append(head)
+            new_w, new_wc, new_d, new_dc = {}, {}, {}, {}
+            for pred in s_preds:
+                if pred in heads:
+                    hs = heads[pred]
+                    cat = (hs[0] if len(hs) == 1
+                           else jnp.concatenate(hs, axis=0))
+                    tgt = (_tuple_hash(cat)
+                           % jnp.uint32(ndev)).astype(jnp.int32)
+                    # full-lex sorted exchange: the absorb's own lexsort
+                    # collapses to the run merge (presorted=True below)
+                    lex = tuple(range(cat.shape[1]))
+                    routed, dropped = _exchange(
+                        cat, tgt, ndev, axis,
+                        bucket_caps[("absorb", pred)], sort_cols=lex)
+                    routed = _merge_runs(routed, ndev, lex)
+                    ovfs.append(dropped > 0)
+                    nw, nc, delta, nf, (od, ow) = _absorb_traced(
+                        [routed],
+                        lambda rows, p=pred: not_seen(rows, p, tails),
+                        tails[pred], wcnt[pred], delta_caps[pred], False,
+                        presorted=True)
+                    new_w[pred], new_wc[pred] = nw, nc
+                    new_d[pred], new_dc[pred] = delta, nf
+                    ovfs += [od, ow]
+                else:           # in S but not derived by any site: drains
+                    new_w[pred] = tails[pred]
+                    new_wc[pred] = wcnt[pred]
+                    new_d[pred] = jnp.full_like(deltas[pred], PAD)
+                    new_dc[pred] = jnp.zeros((), jnp.int32)
+            # overlapped production for iteration k+1: depends only on the
+            # fresh deltas, NOT on the tail merges above, so the exchange
+            # runs concurrently with them and the routed block enters the
+            # next iteration through the carry
+            new_carried = []
+            for si, (plan, jd, carried, tags) in enumerate(sites):
+                if carried is None:
+                    continue
+                blk, flag = produce_carried(si, plan, jd, carried,
+                                            new_d[plan.body_preds[jd]])
+                new_carried.append(blk)
+                ovfs.append(flag)
+            ovf_vec = jnp.concatenate([
+                (jax.lax.psum(jnp.stack(ovfs).astype(jnp.int32), axis)
+                 if ovfs else jnp.zeros((0,), jnp.int32)),
+                jnp.zeros((n_static,), jnp.int32)])
+            fresh_tot = jax.lax.psum(sum(new_dc[p] for p in s_preds), axis)
+            bad = jnp.any(ovf_vec > 0)
+
+            def keep(old, new):
+                return _select_state(bad, old, new)
+
+            return (keep(w_datas, tuple(new_w[p] for p in s_preds)),
+                    keep(w_counts, tuple(new_wc[p] for p in s_preds)),
+                    keep(d_datas, tuple(new_d[p] for p in s_preds)),
+                    keep(d_counts, tuple(new_dc[p] for p in s_preds)),
+                    keep(carried_blks, tuple(new_carried)),
+                    rounds + jnp.where(bad, 0, 1),
+                    trg + jnp.where(bad, 0, jax.lax.psum(triggers, axis)),
+                    drv + jnp.where(bad, 0, fresh_tot),
+                    jnp.where(bad, live, fresh_tot),
+                    ovf_vec)
+
+        def cond(state):
+            rounds, live, ovf_vec = state[5], state[8], state[9]
+            ok = jnp.logical_not(jnp.any(ovf_vec > 0))
+            return jnp.logical_and(jnp.logical_and(live > 0, ok),
+                                   rounds < max_rounds)
+
+        state = (
+            tuple(jnp.full((tail_caps[p], base[p].shape[1]), PAD, jnp.int32)
+                  for p in s_preds),
+            tuple(jnp.zeros((), jnp.int32) for _ in s_preds),
+            tuple(deltas0[p] for p in s_preds),
+            d_counts0,
+            tuple(carried0),
+            rounds0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            live0, ovf0)
+        (w_datas, w_counts, d_datas, d_counts, _c, rounds, trg, drv,
+         _live, ovf_vec) = jax.lax.while_loop(cond, body, state)
+        return (w_datas, tuple(c.reshape(1) for c in w_counts),
+                d_datas, tuple(c.reshape(1) for c in d_counts),
+                rounds, trg, drv, ovf_vec)
+
+    in_specs = (tuple(P(axis, None) for _ in s_preds),
+                tuple(P(axis, None) for _ in s_preds),
+                tuple(P(axis, None) for _ in o_preds),
+                P())
+    out_specs = (tuple(P(axis, None) for _ in s_preds),
+                 tuple(P(axis) for _ in s_preds),
+                 tuple(P(axis, None) for _ in s_preds),
+                 tuple(P(axis) for _ in s_preds),
+                 P(), P(), P(), P())
+    return (jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)),
+            ovf_labels)
 
 
 # ---------------------------------------------------------------------------
@@ -408,7 +859,7 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
     if mesh is None:
         from repro.launch.mesh import make_data_mesh
         mesh = make_data_mesh()
-    ndev = _axis_size(mesh, axis)
+    ndev = axis_size(mesh, axis)
     preds = tuple(sorted(kb.rels))
     use_prefilter = mode == "tg"
     st = MatStats(mode=mode)
@@ -472,6 +923,104 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
                 caps.double(label)
         raise RuntimeError("distributed round: capacity retries exhausted")
 
+    def fit_delta_fix(pred):
+        """Delta block for the fixpoint program: the live delta refit to
+        the planner cap, or an all-PAD block for quiescent S-preds."""
+        if pred not in deltas:
+            cap = caps.delta_cap(pred)
+            return np.full((ndev * cap, skb.arity[pred]), _NP_PAD, np.int32)
+        return fit_delta(pred)
+
+    def fold_tails(s_preds_, w_datas, wcnts):
+        """Fold the per-shard fixpoint tails into the sharded store on the
+        host (the rare exit path): concat + lexsort per shard, growing a
+        store capacity when a shard fills.  Tail rows were deduped against
+        store | tail on their canonical-home shard, so this is a pure
+        union of disjoint sorted sets."""
+        for p, d, cnts in zip(s_preds_, w_datas, wcnts):
+            cnts = np.asarray(cnts, np.int64)
+            if not cnts.sum():
+                continue
+            ar = skb.arity[p]
+            tail_blk = np.asarray(d).reshape(ndev, -1, ar)
+            store_blk = np.asarray(skb.data[p]).reshape(ndev, -1, ar)
+            parts = []
+            for s in range(ndev):
+                rows = np.concatenate(
+                    [store_blk[s, :int(skb.counts[p][s])],
+                     tail_blk[s, :int(cnts[s])]])
+                if len(rows):
+                    rows = rows[np.lexsort(rows.T[::-1])]
+                parts.append(rows)
+            new_counts = np.array([len(pt) for pt in parts], np.int32)
+            cap = caps.store[p]
+            while cap < new_counts.max(initial=0):
+                cap *= 2
+            caps.store[p] = cap
+            out = np.full((ndev, cap, ar), _NP_PAD, np.int32)
+            for s, pt in enumerate(parts):
+                out[s, :len(pt)] = pt
+            skb.data[p] = out.reshape(ndev * cap, ar)
+            skb.counts[p] = new_counts
+
+    def run_fixpoint(live):
+        """Finish a linear fixpoint phase inside the while_loop program:
+        one host pull per program EXIT (converged / tail fold / capacity
+        retry), not per round.  Returns True when the phase ran; False
+        when the remaining program is not linear (the caller steps one
+        host-driven round instead)."""
+        nonlocal deltas
+        tail = _linear_tail(int_plans, live)
+        if tail is None:
+            return False
+        s_preds_, active = tail
+        o_preds_ = tuple(p for p in preds if p not in s_preds_)
+        retries = 0
+        while True:
+            sig = _dist_fix_signature(mesh, axis, ndev, s_preds_, o_preds_,
+                                      caps, active, use_prefilter,
+                                      max_rounds)
+            fn, ovf_labels = _cached_program(
+                sig, lambda: _build_dist_fixpoint(
+                    mesh, axis, ndev, s_preds_, o_preds_, caps, active,
+                    use_prefilter, max_rounds))
+            out = fn(tuple(skb.fit(p, caps.store[p]) for p in s_preds_),
+                     tuple(fit_delta_fix(p) for p in s_preds_),
+                     tuple(skb.fit(p, caps.store[p]) for p in o_preds_),
+                     jnp.int32(st.rounds))
+            w_datas, w_counts, d_datas, d_counts, rounds, trg, drv, ovf = \
+                out
+            # ONE blocking pull per fixpoint-program exit: tail + delta
+            # counts, the loop's round/trigger/derived totals, and the
+            # overflow vector
+            pulled = jax.device_get((w_counts, d_counts, rounds, trg, drv,
+                                     ovf))
+            ops.HOST_SYNC_STATS.dist_pulls += 1
+            ops.HOST_SYNC_STATS.dist_fixpoint_pulls += 1
+            wcnts, dcnts, rounds, trg, drv, ovf = pulled
+            ops.HOST_SYNC_STATS.dist_fixpoint_iters += \
+                int(rounds) - st.rounds
+            st.rounds = int(rounds)
+            st.triggers += int(trg)
+            st.derived += int(drv)
+            deltas = {p: d for p, d, c in zip(s_preds_, d_datas, dcnts)
+                      if int(np.asarray(c).sum())}
+            fold_tails(s_preds_, w_datas, wcnts)
+            if not ovf.any():
+                return True
+            for label in {l for f, l in zip(ovf, ovf_labels) if f}:
+                # tail-full exits included: the fold above made room, but
+                # without growth a long phase would exit every
+                # tail_cap-ish rounds and pulls would scale with the fact
+                # count.  Doubling geometrically bounds tail exits at
+                # O(log facts) cold and — via the capacity memo — ONE
+                # pull per phase warm.
+                caps.double(label)
+            retries += 1
+            if retries > _MAX_RETRIES:
+                raise RuntimeError(
+                    "distributed fixpoint: capacity retries exhausted")
+
     # round 1: extensional rules over B
     ext_active = tuple((plans[id(r)], None)
                        for r in program.extensional_rules())
@@ -479,11 +1028,17 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
         deltas = run_round(ext_active, (), is_ext=True)
     st.rounds = 1
 
-    # fixpoint rounds (host-stepped: one compiled program + one scalar pull
-    # per round, psum convergence)
+    # fixpoint rounds: whole linear phases run inside the compiled
+    # while_loop program (one pull per phase exit); non-linear stretches
+    # fall back to host-stepped rounds (one compiled program + one scalar
+    # pull per round, psum convergence)
     int_rules = program.intensional_rules()
+    int_plans = [plans[id(r)] for r in int_rules]
+    fixpoint_on = ops.dist_fixpoint_enabled()
     while deltas and st.rounds < max_rounds:
         live = tuple(sorted(deltas))
+        if fixpoint_on and run_fixpoint(live):
+            continue
         active = tuple((plans[id(r)], j) for r in int_rules
                        for j, a in enumerate(r.body) if a.pred in deltas)
         if not active:
@@ -530,7 +1085,7 @@ def lower_distributed_tc(mesh, cfg: DistConfig = DistConfig()):
     exchange + planned join + canonical-home absorb) at the configured
     per-shard capacities on a target mesh."""
     from repro.engine.dictionary import Dictionary
-    ndev = _axis_size(mesh, cfg.axis)
+    ndev = axis_size(mesh, cfg.axis)
     program = _tc_program()
     dic = Dictionary()
     plans = [compile_rule_plan(r, dic) for r in program.rules]

@@ -41,7 +41,8 @@ import jax.numpy as jnp
 
 from repro.engine import ops
 from repro.engine.plan import (_MAX_RETRIES, _absorb_traced, _cached_program,
-                               _Caps, _exec_rule_traced, compile_rule_plan,
+                               _Caps, _exec_rule_traced, _linear_tail,
+                               _select_state, compile_rule_plan,
                                program_fingerprint, RulePlan)
 from repro.engine.relation import PAD, Relation, lex_order
 
@@ -122,31 +123,10 @@ def _build_round(preds, caps, active, delta_in, use_prefilter, pallas):
 
 
 # ---------------------------------------------------------------------------
-# fused fixpoint (lax.while_loop over whole rounds)
+# fused fixpoint (lax.while_loop over whole rounds; linear-tail detection
+# and the last-good-state select are shared with the distributed fixpoint
+# via repro.engine.plan)
 # ---------------------------------------------------------------------------
-def _linear_tail(intens_plans, live_preds):
-    """If every rule still reachable from the live deltas has exactly one
-    body atom over a still-changing predicate, the remaining fixpoint is
-    linear: return (changing predicate set S, [(plan, delta_pos)]).  Else
-    None, and the driver keeps stepping host-driven rounds."""
-    S = set(live_preds)
-    while True:
-        add = {p.head_pred for p in intens_plans
-               if any(bp in S for bp in p.body_preds)} - S
-        if not add:
-            break
-        S |= add
-    active = []
-    for plan in intens_plans:
-        hits = [j for j, bp in enumerate(plan.body_preds) if bp in S]
-        if not hits:
-            continue
-        if len(hits) != 1:
-            return None
-        active.append((plan, hits[0]))
-    return (tuple(sorted(S)), tuple(active)) if active else None
-
-
 def _fix_signature(s_preds, o_preds, caps, active, use_prefilter, pallas,
                    max_rounds, donate):
     return ("fix", s_preds, o_preds,
@@ -241,8 +221,7 @@ def _build_fixpoint(s_preds, o_preds, caps, active, use_prefilter, pallas,
             bad = jnp.any(ovf_vec) if n_ovf else jnp.array(False)
 
             def keep(old, new):
-                return jax.tree_util.tree_map(
-                    lambda o, n: jnp.where(bad, o, n), old, new)
+                return _select_state(bad, old, new)
 
             return (keep(w_datas, tuple(new_w[p] for p in s_preds)),
                     keep(w_counts, tuple(new_wc[p] for p in s_preds)),

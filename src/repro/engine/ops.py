@@ -49,6 +49,7 @@ Env-flag matrix
 ``REPRO_SORTED_STORE`` ``1`` sortedness markers + incremental merge-union
 ``REPRO_FUSED``      ``0``   fused round executor (one XLA program per round)
 ``REPRO_DIST``       ``0``   sharded shard_map executor over all local devices
+``REPRO_DIST_FIXPOINT`` ``1`` linear-tail while_loop fixpoint inside shard_map
 =================== ======= ====================================================
 """
 from __future__ import annotations
@@ -86,6 +87,14 @@ def dist_enabled() -> bool:
     """Route eligible materialization through the sharded (shard_map)
     executor over every local device (``materialize(backend="dist")``)."""
     return os.environ.get("REPRO_DIST", "0") == "1"
+
+
+def dist_fixpoint_enabled() -> bool:
+    """Run linear-tail fixpoint phases of the distributed executor inside
+    one ``lax.while_loop``-under-``shard_map`` program (on by default;
+    ``REPRO_DIST_FIXPOINT=0`` forces the host-stepped per-round path for
+    A/B comparison)."""
+    return os.environ.get("REPRO_DIST_FIXPOINT", "1") != "0"
 
 
 _KERNELS = None
@@ -126,19 +135,38 @@ class HostSyncStats:
     can pick an output bucket (``count_pulls`` — one per primitive call).
     The fused executor pulls once per compiled round / fixpoint attempt
     (``fused_pulls``), the distributed executor once per sharded round
-    attempt regardless of the shard count (``dist_pulls``); both count
-    capacity-overflow recompile-and-retry events (``fused_retries`` /
-    ``dist_retries``).  ``total()`` is the engine's host-sync work metric,
-    reported next to trigger counts by the benchmarks."""
+    attempt regardless of the shard count (``dist_pulls``, the TOTAL pull
+    count including fixpoint-program exits); both count capacity-overflow
+    recompile-and-retry events (``fused_retries`` / ``dist_retries`` —
+    host-stepped round retries only; fixpoint-phase capacity retries are
+    visible as extra ``dist_fixpoint_pulls`` instead, so retried rounds
+    and fixpoint-phase exits stay distinguishable).
+
+    The distributed while_loop fixpoint adds two counters:
+    ``dist_fixpoint_pulls`` — pulls taken at fixpoint-program exits
+    (convergence, tail-full fold-and-re-enter, or capacity retry; each is
+    also counted in ``dist_pulls``) — and ``dist_fixpoint_iters`` — rounds
+    executed on-device inside the loop with NO host pull.  The accounting
+    invariant the tests assert:
+
+        dist_pulls == (rounds - dist_fixpoint_iters)   # host-stepped rounds
+                      + dist_retries                    # round retries
+                      + dist_fixpoint_pulls             # fixpoint exits
+
+    ``total()`` is the engine's host-sync work metric, reported next to
+    trigger counts by the benchmarks."""
     count_pulls: int = 0
     fused_pulls: int = 0
     fused_retries: int = 0
     dist_pulls: int = 0
     dist_retries: int = 0
+    dist_fixpoint_pulls: int = 0
+    dist_fixpoint_iters: int = 0
 
     def reset(self):
         self.count_pulls = self.fused_pulls = self.fused_retries = 0
         self.dist_pulls = self.dist_retries = 0
+        self.dist_fixpoint_pulls = self.dist_fixpoint_iters = 0
 
     def total(self) -> int:
         return self.count_pulls + self.fused_pulls + self.dist_pulls
@@ -336,6 +364,17 @@ def _lex_searchsorted_left(hay, probe):
     return lex_range_core(hay, probe)[0]
 
 
+def _lex_searchsorted_right(hay, probe):
+    """Rightmost insertion positions of each ``probe`` row in lexsorted
+    ``hay``."""
+    keys = _lex_keys(hay, probe)
+    if keys is not None:
+        with jax.experimental.enable_x64():
+            return jnp.searchsorted(keys[0], keys[1], side="right"
+                                    ).astype(jnp.int32)
+    return lex_range_core(hay, probe)[1]
+
+
 def member_mask_core(probe_rows, hay_sorted):
     """Row membership of each probe row in a lexsorted haystack (PAD probe
     rows report non-member: PAD columns never match valid haystack rows and
@@ -378,21 +417,23 @@ def anti_keep_core(data, hay_sorted, cols, pallas: bool | None = None):
 
 def merge_core(A, B, na, nb):
     """Merge sorted block B (bcap rows, nb valid) into sorted block A
-    (out_cap rows, na valid); rows must be DISJOINT across the two blocks.
-    Only the B side is binary-searched — bcap probes, not out_cap — and the
-    A side's shifts are recovered from a histogram of the B insertion points
-    + cumsum (O(out_cap) streaming work): output slot of B[i] = i + p_i
-    where p_i = #{A lex< B[i]}, and output slot of A[j] = j + #{i : p_i <=
-    j}.  The output capacity is A's; overflow is ``na + nb > A.shape[0]``,
-    checked by the caller."""
+    (out_cap rows, na valid).  Duplicate rows may appear within and across
+    the blocks: ties place the A run first (a stable multiset merge), so
+    disjoint-set callers (the sorted-store fold) and multiset callers (the
+    exchange run merge) share one core.  Only the B side is binary-searched
+    — bcap probes, not out_cap — and the A side's shifts are recovered from
+    a histogram of the B insertion points + cumsum (O(out_cap) streaming
+    work): output slot of B[i] = i + p_i where p_i = #{A lex<= B[i]}, and
+    output slot of A[j] = j + #{i : p_i <= j}.  The output capacity is A's;
+    overflow is ``na + nb > A.shape[0]``, checked by the caller."""
     out_cap, ar = A.shape
     bcap = B.shape[0]
     ia = jnp.arange(out_cap, dtype=jnp.int32)
     ib = jnp.arange(bcap, dtype=jnp.int32)
     valid_b = ib < nb
-    # insertion position of each B row in A; PAD rows are lex-max so p only
-    # counts valid A rows
-    p = _lex_searchsorted_left(A, B)
+    # insertion position of each B row AFTER any equal A rows; PAD rows are
+    # lex-max so p only counts valid A rows
+    p = _lex_searchsorted_right(A, B)
     h = jnp.zeros(out_cap + 1, jnp.int32)
     h = h.at[jnp.where(valid_b, p, out_cap)].add(1, mode="drop")
     cnt = jnp.cumsum(h)[:out_cap]            # #{valid B rows lex< A[j]}

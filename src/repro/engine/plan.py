@@ -39,9 +39,19 @@ built from the ``repro.engine.ops`` cores.  The optional ``route`` hook
 lets the distributed executor insert a bucket exchange before the Def. 23
 pre-restriction and before both sides of every join without duplicating
 the chain walk.
+
+The *linear-tail fixpoint* plumbing both compiled executors share also
+lives here: :func:`_linear_tail` decides when the remaining fixpoint is
+linear (every still-reachable rule has exactly one body atom over a
+still-changing predicate) so a whole phase can run inside one
+``lax.while_loop``, and :func:`_select_state` is the loop-carry select
+that keeps the last GOOD state when an overflow flag fires mid-loop (the
+loop exits with it; the host doubles capacities and resumes — the
+fixpoint never restarts).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.terms import is_var
@@ -139,6 +149,41 @@ def compile_rule_plan(rule, dic):
 
 
 # ---------------------------------------------------------------------------
+# linear-tail fixpoint plumbing (shared by the fused and distributed
+# while_loop fixpoint programs)
+# ---------------------------------------------------------------------------
+def _linear_tail(intens_plans, live_preds):
+    """If every rule still reachable from the live deltas has exactly one
+    body atom over a still-changing predicate, the remaining fixpoint is
+    linear: return (changing predicate set S, [(plan, delta_pos)]).  Else
+    None, and the driver keeps stepping host-driven rounds."""
+    S = set(live_preds)
+    while True:
+        add = {p.head_pred for p in intens_plans
+               if any(bp in S for bp in p.body_preds)} - S
+        if not add:
+            break
+        S |= add
+    active = []
+    for plan in intens_plans:
+        hits = [j for j, bp in enumerate(plan.body_preds) if bp in S]
+        if not hits:
+            continue
+        if len(hits) != 1:
+            return None
+        active.append((plan, hits[0]))
+    return (tuple(sorted(S)), tuple(active)) if active else None
+
+
+def _select_state(bad, old, new):
+    """Loop-carry select: keep ``old`` (the last good state) wherever the
+    scalar ``bad`` flag is set, else adopt ``new``.  ``old``/``new`` are
+    matching pytrees of arrays."""
+    return jax.tree_util.tree_map(lambda o, n: jnp.where(bad, o, n),
+                                  old, new)
+
+
+# ---------------------------------------------------------------------------
 # traced pieces (built from the ops cores; no host interaction)
 # ---------------------------------------------------------------------------
 def _project_head_core(data, spec):
@@ -159,11 +204,17 @@ def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
     executors' precondition), so primary-column join keys need no sort.  The
     Def. 23 pre-restriction either antijoins against ``pre_data`` (one
     haystack) or calls the ``prefilter(rows, cols) -> keep_mask`` hook (the
-    fused fixpoint loop probes store | tail).  When ``route`` is given (the
-    distributed executor), rows are re-partitioned before the
-    pre-restriction and before both sides of each join —
-    ``route(rows, key_cols, tag) -> (rows', [overflow_flags])`` — and
-    routed blocks lose their known sort order, so the chain re-sorts them.
+    fused fixpoint loop probes store | tail; the distributed fixpoint loop
+    probes the canonical-home store | tail shard, so ``route`` and
+    ``prefilter`` compose — rows are re-partitioned by projected-head hash
+    FIRST, landing each candidate on the shard that owns the would-be head
+    fact).  When ``route`` is given (the distributed executor), rows are
+    re-partitioned before the pre-restriction and before both sides of each
+    join — ``route(rows, key_cols, tag) -> (rows', [overflow_flags],
+    sort_key)`` — where ``sort_key`` is the statically-known sort column of
+    the returned block (``None`` when unknown: the chain re-sorts; the
+    distributed fixpoint pre-sorts hoisted and software-pipelined routed
+    blocks outside the loop body and returns the join key here).
     Returns (head_rows, triggers, overflow_flags); the flag order is pre /
     left / right exchange flags then the join-capacity flag, per join step
     (executors enumerate matching labels statically)."""
@@ -178,13 +229,16 @@ def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
             data = ops.compact_core(data, mask, data.shape[0])
         if plan.pre is not None and plan.pre[0] == j and (
                 pre_data is not None or prefilter is not None):
+            if route is not None:
+                # routed by projected-head hash: each candidate lands on
+                # the canonical-home shard of its would-be head fact, so
+                # the antijoin / prefilter probe is purely local
+                data, flags, data_skey = route(data, plan.pre[1],
+                                               ("pre", j))
+                ovfs += flags
             if prefilter is not None:
                 keep = prefilter(data, plan.pre[1])
             else:
-                if route is not None:
-                    data, flags = route(data, plan.pre[1], ("pre", j))
-                    ovfs += flags
-                    data_skey = None
                 keep = ops.anti_keep_core(data, pre_data, plan.pre[1],
                                           pallas=pallas)
             data = ops.compact_core(data, keep, data.shape[0])
@@ -193,12 +247,10 @@ def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
             continue
         lk, rk, eq2 = plan.joins[j - 1]
         if route is not None:
-            cur, flags = route(cur, (lk,), ("jl", j))
+            cur, flags, cur_skey = route(cur, (lk,), ("jl", j))
             ovfs += flags
-            cur_skey = None
-            data, flags = route(data, (rk,), ("jr", j))
+            data, flags, data_skey = route(data, (rk,), ("jr", j))
             ovfs += flags
-            data_skey = None
         ls = cur if cur_skey == lk else ops.keysort_core(cur, lk,
                                                          pallas=pallas)
         rs = data if data_skey == rk else ops.keysort_core(data, rk,
@@ -216,16 +268,19 @@ def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
 
 
 def _absorb_traced(heads, fresh_mask_fn, into_data, into_count, delta_cap,
-                   pallas):
+                   pallas, presorted=False):
     """Round-level redundancy filtering + merge for one predicate: concat
     rule outputs, lexsort + first-occurrence dedup, keep rows passing
     ``fresh_mask_fn`` (non-membership in the store — or in store | tail
     inside the fused fixpoint loop), compact the fresh rows to the delta
     bucket, and fold them into ``into_data`` (the store, or the loop's tail
-    buffer) with the incremental sorted merge.  Returns
+    buffer) with the incremental sorted merge.  ``presorted`` lets a caller
+    that already holds ONE lexsorted head block (the distributed fixpoint's
+    sorted absorb exchange) skip the O(n log n) sort.  Returns
     (merged, new_count, delta, n_fresh, (delta_overflow, merge_overflow))."""
     cat = heads[0] if len(heads) == 1 else jnp.concatenate(heads, axis=0)
-    s = ops.lexsort_core(cat, pallas=pallas)
+    s = cat if presorted and len(heads) == 1 else ops.lexsort_core(
+        cat, pallas=pallas)
     uniq = ops.dedup_mask_core(s, pallas=pallas)
     fresh_mask = jnp.logical_and(uniq, fresh_mask_fn(s))
     n_fresh = jnp.sum(fresh_mask).astype(jnp.int32)

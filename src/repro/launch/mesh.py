@@ -59,3 +59,12 @@ def make_data_mesh(ndev: int | None = None):
     ``ndev`` (default: all) local devices on the "data" axis."""
     n = ndev if ndev is not None else len(jax.devices())
     return compat_make_mesh((n, 1), ("data", "model"))
+
+
+def axis_size(mesh, axis) -> int:
+    """Total device count along one mesh axis name or a tuple of names
+    (the shard count of anything partitioned over ``axis``)."""
+    n = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        n *= mesh.shape[a]
+    return n

@@ -9,8 +9,9 @@ generated programs + bases:
 * the fused round executor (``REPRO_FUSED=1``),
 * the distributed shard_map executor (``backend="dist"``) — in-process over
   however many local devices exist (1 in plain runs; the CI multi-device
-  leg forces 8), and in a forced-4-device subprocess, both with and without
-  capacity-overflow retries,
+  leg forces 8), and in forced 4- and 8-device subprocesses, both with and
+  without capacity-overflow retries, plus a forced tail-overflow
+  mid-fixpoint leg exercising the while_loop overflow carry,
 
 under both kernel dispatch paths (``REPRO_USE_PALLAS=0/1``).
 
@@ -216,9 +217,33 @@ def test_differential_dist_warm_no_retries(monkeypatch):
     assert_dist_agrees(P, B, monkeypatch)
     ops.HOST_SYNC_STATS.reset()
     st = assert_dist_agrees(P, B, monkeypatch)
-    assert ops.HOST_SYNC_STATS.dist_retries == 0
-    # one convergence pull per round, independent of the shard count
-    assert ops.HOST_SYNC_STATS.dist_pulls == st.rounds
+    s = ops.HOST_SYNC_STATS
+    assert s.dist_retries == 0
+    # every pull accounted for exactly once; the linear tail ran
+    # on-device, so pulls collapse well below the round count
+    assert s.dist_pulls == (st.rounds - s.dist_fixpoint_iters) \
+        + s.dist_retries + s.dist_fixpoint_pulls
+    assert s.dist_fixpoint_iters > 0
+    assert s.dist_pulls < st.rounds
+
+
+def test_differential_dist_tail_overflow_mid_fixpoint(monkeypatch):
+    """Forced tail overflow MID-fixpoint: an 8-row fixpoint tail fills
+    every few while_loop iterations, so the program exits early, the host
+    folds + doubles + resumes, and parity must still hold (the overflow
+    flags riding the loop carry are load-bearing here)."""
+    from repro.engine import plan
+    monkeypatch.setattr(plan, "_CAP_MEMO", {})
+
+    def tiny_tail(self, pred):
+        if pred not in self.tail:
+            self.tail[pred] = 8
+        return self.tail[pred]
+    monkeypatch.setattr(plan._Caps, "tail_cap", tiny_tail)
+    ops.HOST_SYNC_STATS.reset()
+    assert_dist_agrees(parse_program(TC_PROGRAM), _tc_base(), monkeypatch)
+    # the phase could not finish in one program invocation
+    assert ops.HOST_SYNC_STATS.dist_fixpoint_pulls >= 3
 
 
 def test_differential_dist_forced_retries(monkeypatch):
@@ -247,7 +272,8 @@ def test_differential_dist_forced_retries(monkeypatch):
 
 _DIST_SUBPROC = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["XLA_FLAGS"] = \\
+        "--xla_force_host_platform_device_count=%d"
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import sys, json
     sys.path.insert(0, %r)
@@ -270,11 +296,13 @@ _DIST_SUBPROC = textwrap.dedent("""
         ops.HOST_SYNC_STATS.reset()
         kb2 = EngineKB(P, B)
         st = materialize(kb2, mode="tg", backend="dist")
+        s = ops.HOST_SYNC_STATS
         out.append({"name": name, "ndev": st.extra["ndev"],
                     "parity": kb1.decode_facts() == kb2.decode_facts(),
-                    "rounds": st.rounds,
-                    "pulls": ops.HOST_SYNC_STATS.dist_pulls,
-                    "retries": ops.HOST_SYNC_STATS.dist_retries})
+                    "rounds": st.rounds, "pulls": s.dist_pulls,
+                    "retries": s.dist_retries,
+                    "fix_pulls": s.dist_fixpoint_pulls,
+                    "fix_iters": s.dist_fixpoint_iters})
     # forced-overflow leg: tiny exchange buckets + 1-row delta buffers ->
     # retries must fire at any shard count and converge
     from repro.engine import plan
@@ -293,23 +321,26 @@ _DIST_SUBPROC = textwrap.dedent("""
     ops.HOST_SYNC_STATS.reset()
     kb2 = EngineKB(TC, B_tc)
     st = materialize(kb2, mode="tg", backend="dist")
+    s = ops.HOST_SYNC_STATS
     out.append({"name": "tc_retry", "ndev": st.extra["ndev"],
                 "parity": kb1.decode_facts() == kb2.decode_facts(),
-                "rounds": st.rounds,
-                "pulls": ops.HOST_SYNC_STATS.dist_pulls,
-                "retries": ops.HOST_SYNC_STATS.dist_retries})
+                "rounds": st.rounds, "pulls": s.dist_pulls,
+                "retries": s.dist_retries,
+                "fix_pulls": s.dist_fixpoint_pulls,
+                "fix_iters": s.dist_fixpoint_iters})
     print("RESULT " + json.dumps(out))
 """)
 
 
-def test_differential_dist_ndev4_subprocess():
-    """LUBM-L / rho-df / TC parity on a forced 4-shard mesh, with and
-    without overflow retries (subprocess: the forced device count must not
-    leak into this process)."""
+@pytest.mark.parametrize("ndev", [4, 8])
+def test_differential_dist_ndev_subprocess(ndev):
+    """LUBM-L / rho-df / TC parity on forced 4- and 8-shard meshes, with
+    and without overflow retries (subprocess: the forced device count must
+    not leak into this process)."""
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
     lubm_strs = [repr(a) for a in _mini_lubm_base()]
-    script = _DIST_SUBPROC % (src, TC_PROGRAM, lubm_strs)
+    script = _DIST_SUBPROC % (ndev, src, TC_PROGRAM, lubm_strs)
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
@@ -317,10 +348,12 @@ def test_differential_dist_ndev4_subprocess():
     results = json.loads(line[len("RESULT "):])
     assert len(results) == 4
     for rec in results:
-        assert rec["ndev"] == 4, rec
+        assert rec["ndev"] == ndev, rec
         assert rec["parity"], rec
-        # one scalar pull per round attempt, independent of ndev
-        assert rec["pulls"] == rec["rounds"] + rec["retries"], rec
+        # every scalar pull accounted for once: host-stepped rounds +
+        # host-stepped retries + fixpoint-program exits — ndev-independent
+        assert rec["pulls"] == (rec["rounds"] - rec["fix_iters"]) \
+            + rec["retries"] + rec["fix_pulls"], rec
     assert results[-1]["name"] == "tc_retry" and results[-1]["retries"] >= 1
 
 

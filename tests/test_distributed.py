@@ -66,7 +66,9 @@ def test_distributed_tc_4shards():
 
 def test_dist_general_program_inproc(monkeypatch):
     """The general executor (not just TC): LUBM-LI parity on the local
-    mesh, with exactly one scalar pull per round attempt."""
+    mesh, with every scalar pull accounted for exactly once —
+    host-stepped rounds + host-stepped retries + fixpoint-program
+    exits."""
     monkeypatch.delenv("REPRO_DIST", raising=False)
     B = lubm_facts(n_univ=1)
     kb_ref = EngineKB(LUBM_LI, B)
@@ -76,8 +78,55 @@ def test_dist_general_program_inproc(monkeypatch):
     st = materialize(kb, mode="tg", backend="dist")
     assert st.extra.get("dist") is True
     assert kb.decode_facts() == kb_ref.decode_facts()
-    assert ops.HOST_SYNC_STATS.dist_pulls == \
-        st.rounds + ops.HOST_SYNC_STATS.dist_retries
+    s = ops.HOST_SYNC_STATS
+    assert s.dist_pulls == (st.rounds - s.dist_fixpoint_iters) \
+        + s.dist_retries + s.dist_fixpoint_pulls
+
+
+def test_dist_fixpoint_pulls_o_phases(monkeypatch):
+    """Regression guard for the while_loop fixpoint: on deep-chain TC the
+    round count is O(chain length) but the host pulls only at phase
+    boundaries — dist_pulls must be O(phases), NOT O(rounds)."""
+    monkeypatch.delenv("REPRO_DIST", raising=False)
+    monkeypatch.delenv("REPRO_DIST_FIXPOINT", raising=False)
+    TC = parse_program("e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    B = [parse_atom(f"e(v{i}, v{i+1})") for i in range(64)]
+    kb_ref = EngineKB(TC, B)
+    materialize(kb_ref, mode="tg")
+    # warm once so the capacity planner converges, then measure
+    kb = EngineKB(TC, B)
+    materialize(kb, mode="tg", backend="dist")
+    ops.HOST_SYNC_STATS.reset()
+    kb = EngineKB(TC, B)
+    st = materialize(kb, mode="tg", backend="dist")
+    assert kb.decode_facts() == kb_ref.decode_facts()
+    s = ops.HOST_SYNC_STATS
+    assert st.rounds > 60
+    # the whole linear tail ran on-device: nearly every round was a loop
+    # iteration, and the pull count collapsed to a handful of phase exits
+    assert s.dist_fixpoint_iters >= st.rounds - 2
+    assert s.dist_pulls <= 4
+    assert s.dist_pulls == (st.rounds - s.dist_fixpoint_iters) \
+        + s.dist_retries + s.dist_fixpoint_pulls
+
+
+def test_dist_fixpoint_flag_off(monkeypatch):
+    """REPRO_DIST_FIXPOINT=0 forces the host-stepped path: identical
+    facts, one pull per round attempt, fixpoint counters untouched."""
+    monkeypatch.delenv("REPRO_DIST", raising=False)
+    monkeypatch.setenv("REPRO_DIST_FIXPOINT", "0")
+    TC = parse_program("e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    B = [parse_atom(f"e(v{i}, v{i+1})") for i in range(12)] + \
+        [parse_atom("e(v7, v2)")]
+    kb_ref = EngineKB(TC, B)
+    materialize(kb_ref, mode="tg")
+    ops.HOST_SYNC_STATS.reset()
+    kb = EngineKB(TC, B)
+    st = materialize(kb, mode="tg", backend="dist")
+    assert kb.decode_facts() == kb_ref.decode_facts()
+    s = ops.HOST_SYNC_STATS
+    assert s.dist_fixpoint_pulls == s.dist_fixpoint_iters == 0
+    assert s.dist_pulls == st.rounds + s.dist_retries
 
 
 def test_dist_env_flag_routes(monkeypatch):

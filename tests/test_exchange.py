@@ -116,9 +116,11 @@ def test_exchange_retry_loop_converges(monkeypatch):
     assert st.extra.get("dist") is True
     assert ops.HOST_SYNC_STATS.dist_retries >= 1
     assert kb.decode_facts() == kb_ref.decode_facts()
-    # every retry re-pulled once: pulls = adopted rounds + retries
-    assert ops.HOST_SYNC_STATS.dist_pulls == \
-        st.rounds + ops.HOST_SYNC_STATS.dist_retries
+    # every pull is accounted for exactly once: host-stepped rounds +
+    # host-stepped retries + fixpoint-program exits
+    s = ops.HOST_SYNC_STATS
+    assert s.dist_pulls == (st.rounds - s.dist_fixpoint_iters) \
+        + s.dist_retries + s.dist_fixpoint_pulls
 
 
 # ---------------------------------------------------------------------------
