@@ -1,0 +1,132 @@
+"""Incremental-maintenance cost table — the trajectory behind
+``BENCH_delta.json``.
+
+The claim under test: once a KB is materialized, maintaining it under a
+small update batch must cost ~|affected delta|, not ~|KB| — the
+``materialize_delta`` call re-fires only rules touched by the delta
+(fused executor, warm capacity plans), so a one-fact insert into a
+100k-fact closure is orders of magnitude cheaper than re-materializing.
+
+Per scenario (deep-chain TC and wide random-graph TC, same instances as
+the dist table):
+
+* ``delta.<scen>.scratch`` — steady-state from-scratch fused
+  materialization (warmed until ``plan._CAP_MEMO`` is stable), the
+  baseline every delta row is normalized against (``frac_of_scratch``).
+* ``delta.<scen>.insert.dN`` / ``delete.dN`` — a batch of N disconnected
+  fresh edges inserted (each derives one closure fact) then DRed-deleted
+  back, N in {1, 8, 64}: the cost should grow with N, not with |KB|.
+* ``delta.tc_chain.cascade1`` — one edge PREPENDED to the chain, whose
+  closure cascades one hop per round (O(chain) rounds, O(chain) facts):
+  the deep-cascade case where propagation hands off to the fused
+  ``lax.while_loop`` fixpoint.  Delta cost tracks the DERIVED delta, not
+  the batch size, and still undercuts from-scratch.
+
+Each delta row reports wall seconds, ``frac_of_scratch``, the DRed/insert
+counters (``over_deleted`` / ``rescued`` / ``propagated``), and
+``retries`` — fused capacity-overflow retries during the timed calls,
+which must be 0: the batches are sized within the warm plans, so a
+nonzero count means ``_CAP_MEMO`` reuse across delta calls regressed.
+``delta.<scen>.insert.d1`` is the CI smoke gate (small-delta cost below
+half of from-scratch wall)."""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core.terms import Atom
+from repro.data.kb_sources import TC, tc_chain_facts, tc_random_facts
+from repro.engine import ops, plan
+from repro.engine.materialize import EngineKB, materialize
+
+
+def _steady_scratch(P, B, max_warm=5):
+    """Warm until no planned capacity moved on the last run, then time a
+    steady-state fused from-scratch materialization."""
+    prev = None
+    for _ in range(max_warm):
+        kb = EngineKB(P, B)
+        materialize(kb, mode="tg")
+        snap = sorted((str(k), v) for k, v in plan._CAP_MEMO.items())
+        if snap == prev:
+            break
+        prev = snap
+    kb = EngineKB(P, B)
+    t0 = time.perf_counter()
+    st = materialize(kb, mode="tg")
+    return time.perf_counter() - t0, st, kb
+
+
+def _edge_batch(tag, n):
+    """n disconnected fresh edges: each derives exactly one closure fact."""
+    return [Atom("e", (f"{tag}x{i}", f"{tag}y{i}")) for i in range(n)]
+
+
+def run(smoke: bool = False):
+    prior = os.environ.get("REPRO_FUSED")
+    os.environ["REPRO_FUSED"] = "1"
+    try:
+        chain_n = 48 if smoke else 128
+        scens = [
+            ("tc_chain", TC, tc_chain_facts(chain_n)),
+            ("tc_rand", TC, tc_random_facts(*((200, 600) if smoke
+                                              else (400, 1200)))),
+        ]
+        sizes = (1, 8) if smoke else (1, 8, 64)
+        for name, P, B in scens:
+            scratch_s, st0, kb0 = _steady_scratch(P, B)
+            emit(f"delta.{name}.scratch", scratch_s, st0.derived,
+                 facts=kb0.num_facts(), rounds=st0.rounds)
+
+            kb = EngineKB(P, B)
+            materialize(kb, mode="tg")
+            for n in sizes:
+                # warm the delta paths at THIS batch size (delta capacity
+                # buckets are pow2(|batch|), so each size compiles its own
+                # programs) on a throwaway cycle, then time fresh batches
+                wb = _edge_batch(f"w{n}", n)
+                kb.materialize_delta(insertions=wb)
+                kb.materialize_delta(deletions=wb)
+                batch = _edge_batch(f"b{n}", n)
+                r0 = ops.HOST_SYNC_STATS.fused_retries
+                t0 = time.perf_counter()
+                st = kb.materialize_delta(insertions=batch)
+                t_ins = time.perf_counter() - t0
+                emit(f"delta.{name}.insert.d{n}", t_ins,
+                     st.extra["propagated"],
+                     frac_of_scratch=round(t_ins / scratch_s, 4),
+                     retries=ops.HOST_SYNC_STATS.fused_retries - r0,
+                     rounds=st.rounds, facts=kb.num_facts())
+                t0 = time.perf_counter()
+                st = kb.materialize_delta(deletions=batch)
+                t_del = time.perf_counter() - t0
+                emit(f"delta.{name}.delete.d{n}", t_del,
+                     st.extra["over_deleted"],
+                     frac_of_scratch=round(t_del / scratch_s, 4),
+                     retries=ops.HOST_SYNC_STATS.fused_retries - r0,
+                     over_deleted=st.extra["over_deleted"],
+                     rescued=st.extra["rescued"], facts=kb.num_facts())
+            assert kb.num_facts() == kb0.num_facts(), \
+                "delta cycles did not restore the from-scratch store"
+
+        # one edge PREPENDED to the chain: the closure cascades one hop per
+        # round (O(chain) rounds), the case the fused while_loop handoff
+        # exists for — cost tracks the derived delta, not the KB
+        P, B = TC, tc_chain_facts(chain_n)
+        kb = EngineKB(P, B)
+        materialize(kb, mode="tg")
+        for tag in ("wp", "bp"):                     # warm cycle, timed cycle
+            head = [Atom("e", (f"{tag}0", "v0"))]
+            t0 = time.perf_counter()
+            st = kb.materialize_delta(insertions=head)
+            t_ext = time.perf_counter() - t0
+            kb.materialize_delta(deletions=head)
+        emit("delta.tc_chain.cascade1", t_ext, st.extra["propagated"],
+             rounds=st.rounds, fused=int(bool(st.extra.get("fused"))),
+             facts=kb.num_facts())
+    finally:
+        if prior is None:
+            os.environ.pop("REPRO_FUSED", None)
+        else:
+            os.environ["REPRO_FUSED"] = prior

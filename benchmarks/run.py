@@ -23,8 +23,8 @@ import os
 import platform
 import sys
 
-from benchmarks import (bench_chasebench, bench_datalog, bench_dist,
-                        bench_fused, bench_linear, bench_rdfs,
+from benchmarks import (bench_chasebench, bench_datalog, bench_delta,
+                        bench_dist, bench_fused, bench_linear, bench_rdfs,
                         bench_scalability, bench_triggers)
 from benchmarks import common
 
@@ -37,6 +37,7 @@ TABLES = {
     "scalability": bench_scalability.run,  # paper Table 7
     "tc": bench_fused.run,               # fused vs two-phase host syncs
     "dist": bench_dist.run,              # sharded executor scaling (ndev)
+    "delta": bench_delta.run,            # incremental maintenance cost
 }
 
 
@@ -85,6 +86,12 @@ def main() -> None:
                       else "BENCH_dist.json",
                       [r for r in common.RESULTS
                        if r["name"].startswith("dist.")])
+    if "delta" in which:
+        # and for the incremental-maintenance cost trajectory
+        write_payload("BENCH_delta_smoke.json" if args.smoke
+                      else "BENCH_delta.json",
+                      [r for r in common.RESULTS
+                       if r["name"].startswith("delta.")])
 
 
 if __name__ == "__main__":

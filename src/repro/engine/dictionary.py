@@ -5,10 +5,18 @@ Ids:
 * constants: 0 .. n-1 (interned strings)
 * skolem nulls: negative ids, allocated per (rule, exvar, frontier tuple) —
   matching the skolem chase the engine implements for existential rules.
+
+Null id ``-k`` decodes to the dedicated ``Null(k)`` sentinel (never to a
+string), so a genuine constant that happens to be named like a null (e.g.
+``"_sk1"``) can never collide with a labelled null: ``decode`` is injective
+over all allocated ids and ``encode(decode(i)) == i`` for every id the
+dictionary has handed out.
 """
 from __future__ import annotations
 
 from typing import Dict, Hashable, List
+
+from repro.core.terms import Null
 
 
 class Dictionary:
@@ -19,6 +27,14 @@ class Dictionary:
         self._next_null = -1
 
     def encode(self, term) -> int:
+        if isinstance(term, Null):
+            # only engine-allocated nulls round-trip; a fabricated Null id
+            # could collide with a future skolem allocation
+            if not 1 <= term.nid <= self.num_nulls:
+                raise ValueError(f"unknown null {term!r}: nulls are allocated "
+                                 "by Dictionary.skolem, not encoded from the "
+                                 "outside")
+            return -term.nid
         i = self._to_id.get(term)
         if i is None:
             i = len(self._from_id)
@@ -31,7 +47,7 @@ class Dictionary:
 
     def decode(self, i: int):
         if i < 0:
-            return f"_sk{-i}"
+            return Null(-i)
         return self._from_id[i]
 
     def skolem(self, key: tuple) -> int:

@@ -254,10 +254,20 @@ def _build_fixpoint(s_preds, o_preds, caps, active, use_prefilter, pallas,
 # ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
-def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000):
+def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
+                      initial_deltas=None):
     """Fused-program materialization of ``kb``.  Returns MatStats, or None
     when the program is outside the fused fragment (the caller falls back to
-    the two-phase executor)."""
+    the two-phase executor).
+
+    ``initial_deltas`` (pred -> lexsorted Relation of rows ALREADY absorbed
+    into the store) switches the driver to incremental mode: round 1 over the
+    extensional rules is skipped and the seeded deltas enter the semi-naive
+    loop directly — the entry point behind
+    ``repro.engine.incremental.materialize_delta``.  Seeded deltas may live
+    on EDB predicates, so the loop considers every rule with a live body
+    atom, not just the intensional ones (for from-scratch runs the two sets
+    coincide: deltas only ever hold derived predicates)."""
     from repro.engine.materialize import MatStats
     program = kb.program
     plans = {}
@@ -283,12 +293,14 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000):
         stores[p], counts[p] = rel.data, rel.count
     fp = program_fingerprint((plans[id(r)].key for r in program.rules),
                              sum(counts.values()))
-    caps = _Caps(fp, {p: (stores[p], counts[p]) for p in preds})
+    caps = _Caps(fp, {p: (stores[p], counts[p]) for p in preds},
+                 lean=initial_deltas is not None)
     for p in preds:
         stores[p] = ops.fit_rows(stores[p], caps.store[p])
 
     ext_plans = [plans[id(r)] for r in program.extensional_rules()]
-    int_plans = [plans[id(r)] for r in program.intensional_rules()]
+    loop_rules = list(program.rules)
+    loop_plans = [plans[id(r)] for r in loop_rules]
     deltas: dict = {}           # pred -> (data at planner delta cap, count)
 
     def run_round(active, delta_preds, is_ext=False):
@@ -327,16 +339,23 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000):
                 stores[p] = ops.fit_rows(stores[p], caps.store[p])
         raise RuntimeError("fused round: capacity retries exhausted")
 
-    # round 1: extensional rules over B
-    ext_active = tuple((plan, None) for plan in ext_plans)
-    if ext_active:
-        deltas = run_round(ext_active, (), is_ext=True)
-    st.rounds = 1
+    if initial_deltas is None:
+        # round 1: extensional rules over B
+        ext_active = tuple((plan, None) for plan in ext_plans)
+        if ext_active:
+            deltas = run_round(ext_active, (), is_ext=True)
+        st.rounds = 1
+    else:
+        st.extra["delta"] = True
+        for p, rel in initial_deltas.items():
+            if rel.count:
+                caps.seed_delta(p, rel.count)
+                deltas[p] = (rel.data, rel.count)
 
     # fixpoint rounds
     while deltas and st.rounds < max_rounds:
         live = tuple(sorted(deltas))
-        tail = _linear_tail(int_plans, live)
+        tail = _linear_tail(loop_plans, live)
         if tail is not None:
             s_preds, active = tail
             o_preds = tuple(p for p in preds if p not in s_preds)
@@ -415,7 +434,7 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000):
                             "fused fixpoint: capacity retries exhausted")
             break
         active = tuple((plans[id(r)], j)
-                       for r in program.intensional_rules()
+                       for r in loop_rules
                        for j, a in enumerate(r.body) if a.pred in deltas)
         if not active:
             break

@@ -1,0 +1,330 @@
+"""Incremental maintenance of a materialized KB: ``materialize_delta``.
+
+Live serving traffic is updates, not one-shot materialization: re-running
+the chase per insert/retract is exactly the redundant computation trigger
+graphs exist to avoid.  This module maintains an already-materialized
+:class:`EngineKB` under fact insertions and deletions without
+re-materializing, with the guarantee (gated by the differential suite) that
+the maintained store always equals a from-scratch materialization of the
+updated base.
+
+Insertions — semi-naive from a seeded delta
+-------------------------------------------
+Inserted facts are absorbed into the (sorted) store with an incremental
+``merge_union`` and become the FIRST delta of the standard semi-naive loop:
+every rule with a body atom over a live delta predicate re-fires against
+(delta at one position, full store elsewhere), exactly the engine's
+fixpoint rounds but warm.  Shallow cascades (the common case: a few facts,
+a couple of rounds) run two-phase at delta-sized buffer capacities; when a
+cascade runs deep and ``REPRO_FUSED=1`` with the program in the plannable
+fragment, the live deltas are handed to the fused executor
+(``materialize_fused(initial_deltas=...)``), so the long tail runs as
+compiled whole-round programs and linear fixpoints finish inside one
+``lax.while_loop``.  Capacity plans are memoized per
+``program_fingerprint`` (``plan._CAP_MEMO``), so repeated delta calls at a
+stable KB scale plan right first try: zero overflow retries after the first
+call.
+
+Deletions — DRed (delete and re-derive)
+---------------------------------------
+Deletion propagation follows the classic over-delete / rescue / re-derive
+discipline, adapted to the skolem-chase semantics the engine implements
+(the chase-variant considerations are surveyed in "The data-exchange chase
+under the microscope"; skolem ids are memoized per (rule, exvar, frontier)
+so re-derived existential facts keep their null ids):
+
+1. **Over-deletion**: the deleted facts seed a semi-naive loop through the
+   rule bodies over the ORIGINAL store, with the Def. 23 pre-restriction
+   *inverted* (``execute_rule(..., prefilter_mode="semi")``): candidate
+   body rows are kept only when their projected head tuple IS already in
+   the store — only existing facts can be over-deleted.  Everything
+   reachable from a deleted fact lands in the over-deleted set ``O``.
+2. **Commit**: ``store -= O`` per predicate via the sorted set-difference
+   ``ops.merge_diff`` (binary-search probes + in-place compaction; the
+   store is never re-sorted).
+3. **Rescue**: facts in ``O`` that must survive — base facts not
+   explicitly retracted (``EngineKB.base`` tracks extensional facts by
+   fiat), plus one alternative-derivation pass: every rule re-fires over
+   the post-deletion store restricted (inverted prefilter again) to heads
+   in ``O``.  Rescued facts re-enter through the insertion path, whose
+   semi-naive propagation re-derives any remaining cascade — so one rescue
+   pass suffices for completeness.
+
+Backends: insert propagation reuses the fused executor when eligible and
+falls back to the two-phase reference loop (existential rules,
+disconnected bodies, ``REPRO_FUSED=0``).  The distributed executor does
+not take deltas yet (see ROADMAP); ``REPRO_DIST=1`` sessions fall back to
+the single-device paths for delta calls.
+
+Semantics of one ``materialize_delta(kb, insertions, deletions)`` call:
+deletions are applied first, then insertions (a fact in both sets ends up
+present).  The result equals ``materialize(EngineKB(program,
+(base - deletions) | insertions))`` up to null renaming.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.engine import ops
+from repro.engine.materialize import MatStats, execute_rule
+from repro.engine.relation import Relation
+
+
+def _encode_facts(kb, facts) -> Dict[str, Relation]:
+    """Encode ground atoms into per-predicate lexsorted deduped relations.
+    Unknown predicates are registered with empty store/base relations."""
+    rows = defaultdict(list)
+    for f in facts:
+        if f.pred in kb.arities and f.arity != kb.arities[f.pred]:
+            raise ValueError(f"arity mismatch for {f.pred}: got {f.arity}, "
+                             f"KB has {kb.arities[f.pred]}")
+        rows[f.pred].append(kb.dict.encode_many(f.args))
+        if f.pred not in kb.arities:
+            kb.arities[f.pred] = f.arity
+            kb.rels[f.pred] = Relation.empty(max(f.arity, 1))
+            kb.base[f.pred] = kb.rels[f.pred]
+    out = {}
+    for p, rws in rows.items():
+        ar = kb.arities[p]
+        rel = Relation.from_numpy(
+            np.asarray(rws, np.int32).reshape(len(rws), ar))
+        out[p] = ops.dedup(rel)
+    return out
+
+
+def _absorb(kb, pred: str, rel: Optional[Relation]) -> Optional[Relation]:
+    """Dedup + antijoin ``rel`` against the store and fold the fresh rows in
+    (same contract as the materializer's round absorb).  Returns the fresh
+    delta, or None when nothing new."""
+    if rel is None or rel.count == 0:
+        return None
+    rel = ops.dedup(rel)
+    fresh = ops.antijoin(rel, kb.rels[pred])
+    if fresh.count == 0:
+        return None
+    if ops.sorted_store_enabled():
+        kb.rels[pred] = ops.merge_union(kb.rels[pred], fresh)
+    else:
+        kb.rels[pred] = ops.union(kb.rels[pred], fresh, dedupe=False)
+    return fresh
+
+
+def _fold(rels):
+    acc = None
+    for r in rels:
+        acc = r if acc is None else ops.union(acc, r, dedupe=False)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# insertion side: semi-naive propagation from a seeded delta
+# ---------------------------------------------------------------------------
+#
+# Small deltas run two-phase on purpose: ops size their buffers to the
+# actual delta (pow2 of a handful of rows), while the fused round programs
+# are compiled at the memoized FROM-SCRATCH capacities — reusing them for a
+# one-fact delta pays full-scratch-round cost per round (measured ~30x
+# slower on a 37k-fact TC).  Only when the cascade runs deep (many rounds,
+# e.g. extending a chain) does the fused executor's on-device fixpoint win
+# over per-round host stepping, so propagation hands off to
+# ``materialize_fused(initial_deltas=...)`` after ``_FUSED_HANDOFF`` rounds.
+_FUSED_HANDOFF = 3
+
+
+def _propagate(kb, seeds: Dict[str, Relation], st: MatStats, mode: str,
+               max_rounds: int) -> None:
+    """Run the semi-naive delta loop from ``seeds`` (already absorbed into
+    the store).  Hands deep cascades off to the fused executor."""
+    deltas = dict(seeds)
+    fused_ok = ops.fused_enabled() and mode in ("tg", "tg_noopt")
+    for rounds in range(max_rounds):
+        if not deltas:
+            break
+        if fused_ok and rounds >= _FUSED_HANDOFF:
+            from repro.engine.fused import materialize_fused
+            fst = materialize_fused(kb, mode=mode,
+                                    max_rounds=max_rounds - rounds,
+                                    initial_deltas=deltas)
+            if fst is not None:
+                st.rounds += fst.rounds
+                st.triggers += fst.triggers
+                st.derived += fst.derived
+                st.extra["propagated"] += fst.derived
+                st.extra["fused"] = True
+                return
+            fused_ok = False    # outside the plannable fragment
+        derived_round = defaultdict(list)
+        for rule in kb.program.rules:
+            prefilter = kb.rels.get(rule.head.pred) if mode == "tg" else None
+            for j, atom in enumerate(rule.body):
+                if atom.pred not in deltas:
+                    continue
+                inputs = [deltas[atom.pred] if i == j else kb.rels[a.pred]
+                          for i, a in enumerate(rule.body)]
+                head, trg = execute_rule(kb, rule, inputs,
+                                         prefilter=prefilter)
+                st.triggers += trg
+                if head.count:
+                    derived_round[rule.head.pred].append(head)
+        st.rounds += 1
+        new_deltas: Dict[str, Relation] = {}
+        for pred, rels in derived_round.items():
+            fresh = _absorb(kb, pred, _fold(rels))
+            if fresh is not None:
+                new_deltas[pred] = fresh
+                st.derived += fresh.count
+                st.extra["propagated"] += fresh.count
+        deltas = new_deltas
+
+
+# ---------------------------------------------------------------------------
+# deletion side: DRed over-deletion + rescue
+# ---------------------------------------------------------------------------
+def _over_delete(kb, present: Dict[str, Relation], st: MatStats,
+                 max_rounds: int) -> Dict[str, Relation]:
+    """Close ``present`` (deleted facts actually in the store) under
+    "derivable using a deleted fact": semi-naive over the ORIGINAL store
+    with the Def. 23 prefilter inverted.  Returns the over-deleted set."""
+    over = dict(present)
+    deltas = dict(present)
+    for _ in range(max_rounds):
+        if not deltas:
+            break
+        derived_round = defaultdict(list)
+        for rule in kb.program.rules:
+            pref = kb.rels.get(rule.head.pred)
+            pref = pref if pref is not None and pref.count else None
+            for j, atom in enumerate(rule.body):
+                if atom.pred not in deltas:
+                    continue
+                inputs = [deltas[atom.pred] if i == j else kb.rels[a.pred]
+                          for i, a in enumerate(rule.body)]
+                head, trg = execute_rule(kb, rule, inputs, prefilter=pref,
+                                         prefilter_mode="semi")
+                st.triggers += trg
+                if head.count:
+                    derived_round[rule.head.pred].append(head)
+        st.rounds += 1
+        new_deltas: Dict[str, Relation] = {}
+        for pred, rels in derived_round.items():
+            acc = ops.dedup(_fold(rels))
+            # only facts in the store can be over-deleted, and each only once
+            acc = ops.semijoin(acc, kb.rels[pred])
+            if pred in over:
+                acc = ops.antijoin(acc, over[pred])
+            if acc.count == 0:
+                continue
+            over[pred] = (ops.merge_union(over[pred], acc)
+                          if pred in over else acc)
+            new_deltas[pred] = acc
+        deltas = new_deltas
+    return over
+
+
+def _rescue(kb, over: Dict[str, Relation], st: MatStats) \
+        -> Dict[str, Relation]:
+    """Facts in ``over`` that must come back: base facts not explicitly
+    retracted, plus one alternative-derivation pass over the post-deletion
+    store (cascaded re-derivation is completed by the insertion loop the
+    rescued facts are fed into)."""
+    rescued: Dict[str, Relation] = {}
+    for p, rel in over.items():
+        base = kb.base.get(p)
+        if base is not None and base.count:
+            keep = ops.semijoin(rel, base)
+            if keep.count:
+                rescued[p] = keep
+    derived_round = defaultdict(list)
+    for rule in kb.program.rules:
+        over_h = over.get(rule.head.pred)
+        if over_h is None or over_h.count == 0:
+            continue
+        inputs = [kb.rels[a.pred] for a in rule.body]
+        head, trg = execute_rule(kb, rule, inputs, prefilter=over_h,
+                                 prefilter_mode="semi")
+        st.triggers += trg
+        if head.count:
+            derived_round[rule.head.pred].append(head)
+    for pred, rels in derived_round.items():
+        acc = ops.semijoin(ops.dedup(_fold(rels)), over[pred])
+        if acc.count == 0:
+            continue
+        rescued[pred] = (ops.union(rescued[pred], acc, dedupe=True)
+                         if pred in rescued else acc)
+    return rescued
+
+
+def _delete(kb, dels: Dict[str, Relation], st: MatStats,
+            max_rounds: int) -> Dict[str, Relation]:
+    """DRed deletion: over-delete, commit ``store -= O`` via ``merge_diff``,
+    rescue.  Returns the rescued facts (to be re-inserted by the caller)."""
+    # requested deletions restricted to facts actually present
+    present = {}
+    for p, rel in dels.items():
+        pr = ops.semijoin(rel, kb.rels[p])
+        if pr.count:
+            present[p] = pr
+    # explicit retraction always leaves the base set (base facts are only
+    # protected from OVER-deletion, never from the user's own delete)
+    for p, rel in dels.items():
+        base = kb.base.get(p)
+        if base is not None and base.count:
+            kb.base[p] = ops.merge_diff(base, rel)
+    if not present:
+        return {}
+    over = _over_delete(kb, present, st, max_rounds)
+    st.extra["over_deleted"] += sum(r.count for r in over.values())
+    for p, rel in over.items():
+        kb.rels[p] = ops.merge_diff(kb.rels[p], rel)
+    rescued = _rescue(kb, over, st)
+    st.extra["rescued"] += sum(r.count for r in rescued.values())
+    return rescued
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+def materialize_delta(kb, insertions=(), deletions=(), mode: str = "tg",
+                      max_rounds: int = 10_000) -> MatStats:
+    """Incrementally maintain the materialized ``kb`` under a batch of fact
+    ``insertions`` and ``deletions`` (ground :class:`Atom` iterables).
+
+    Deletions apply first (DRed over-deletion / rescue), then insertions
+    (semi-naive from the seeded delta; fused when eligible) — a fact in
+    both batches ends up present.  The maintained store equals a
+    from-scratch materialization of the updated base (differentially
+    tested), at a cost that scales with the size of the affected delta, not
+    the KB.  ``mode`` controls the Def. 23 pre-restriction on the insertion
+    side exactly as in ``materialize`` (``tg`` = prefiltered)."""
+    assert mode in ("seminaive", "tg", "tg_noopt")
+    st = MatStats(mode=f"delta[{mode}]")
+    st.extra.update(delta=True, over_deleted=0, rescued=0, propagated=0)
+    dels = _encode_facts(kb, deletions) if deletions else {}
+    ins = _encode_facts(kb, insertions) if insertions else {}
+    st.extra["deleted"] = sum(r.count for r in dels.values())
+    st.extra["inserted"] = sum(r.count for r in ins.values())
+
+    rescued = _delete(kb, dels, st, max_rounds) if dels else {}
+
+    # inserted facts become base facts by fiat
+    for p, rel in ins.items():
+        base = kb.base.get(p)
+        kb.base[p] = (ops.union(base, rel, dedupe=True)
+                      if base is not None and base.count else rel)
+
+    # seed the semi-naive loop with whatever is genuinely new to the store:
+    # user insertions plus rescued facts
+    seeds: Dict[str, Relation] = {}
+    for p in sorted(set(ins) | set(rescued)):
+        cand = _fold([r for r in (ins.get(p), rescued.get(p))
+                      if r is not None])
+        fresh = _absorb(kb, p, cand)
+        if fresh is not None:
+            seeds[p] = fresh
+            st.derived += fresh.count
+    if seeds:
+        _propagate(kb, seeds, st, mode, max_rounds)
+    return st

@@ -57,18 +57,38 @@ class EngineKB:
             rows[f.pred].append(self.dict.encode_many(f.args))
             self.arities.setdefault(f.pred, f.arity)
         self.rels: Dict[str, Relation] = {}
+        # the base (extensional) facts, tracked separately from the derived
+        # closure: incremental deletion (DRed) must know which facts exist by
+        # fiat — they are never over-deleted away unless explicitly retracted
+        self.base: Dict[str, Relation] = {}
         for p, ar in self.arities.items():
             if p in rows:
                 rel = Relation.from_numpy(
                     np.asarray(rows[p], np.int32).reshape(len(rows[p]), ar))
-                # store invariant: every store relation is lexsorted (and
-                # set-semantic), so per-round dedup/antijoin skip their sort
-                # pass and unions become incremental merges
-                if ops.sorted_store_enabled():
-                    rel = ops.dedup(rel)
+                # set semantics hold on every path: duplicate base facts are
+                # collapsed regardless of REPRO_SORTED_STORE, so fact counts
+                # and trigger stats agree across flag settings.  (With the
+                # sorted store this doubles as the store invariant: every
+                # store relation is lexsorted, so per-round dedup/antijoin
+                # skip their sort pass and unions become incremental merges.)
+                rel = ops.dedup(rel)
                 self.rels[p] = rel
             else:
                 self.rels[p] = Relation.empty(max(ar, 1))
+            self.base[p] = self.rels[p]
+
+    def materialize_delta(self, insertions=(), deletions=(), **kw):
+        """Incrementally maintain an already-materialized store: see
+        :func:`repro.engine.incremental.materialize_delta`."""
+        from repro.engine.incremental import materialize_delta
+        return materialize_delta(self, insertions=insertions,
+                                 deletions=deletions, **kw)
+
+    def insert_facts(self, facts, **kw):
+        return self.materialize_delta(insertions=facts, **kw)
+
+    def delete_facts(self, facts, **kw):
+        return self.materialize_delta(deletions=facts, **kw)
 
     def decode_facts(self):
         out = set()
@@ -101,14 +121,19 @@ def _atom_filters(atom: Atom, dic: Dictionary):
 
 
 def execute_rule(kb: EngineKB, rule: Rule, inputs: List[Relation],
-                 prefilter: Optional[Relation] = None):
+                 prefilter: Optional[Relation] = None,
+                 prefilter_mode: str = "anti"):
     """Evaluate the body over per-atom input relations.  Returns
     (head_rel (n, head_arity) possibly with PAD skolem marker cols,
      triggers).
 
     ``prefilter``: Def. 23 — a relation of already-derived head tuples; if
     some body atom's variables cover the head variables, that atom's input is
-    antijoined against it before the join (restricting instantiations)."""
+    antijoined against it before the join (restricting instantiations).
+    ``prefilter_mode="semi"`` inverts the restriction (keep only rows whose
+    projected head tuple IS in ``prefilter``) — deletion propagation walks
+    rule bodies restricted to heads that exist in the store / over-deleted
+    set, the mirror image of the insertion-side redundancy filter."""
     dic = kb.dict
     triggers = 0
 
@@ -129,7 +154,9 @@ def execute_rule(kb: EngineKB, rule: Rule, inputs: List[Relation],
         eq, consts, vc = _atom_filters(atom, dic)
         rel = ops.filter_rows(inputs[j], eq, consts)
         if pre_j is not None and pre_j[0] == j:
-            rel = ops.antijoin(rel, prefilter, cols=pre_j[1])
+            rel = (ops.semijoin(rel, prefilter, cols=pre_j[1])
+                   if prefilter_mode == "semi"
+                   else ops.antijoin(rel, prefilter, cols=pre_j[1]))
         if cur is None:
             cur = rel
             var_col = dict(vc)
@@ -177,13 +204,23 @@ def execute_rule(kb: EngineKB, rule: Rule, inputs: List[Relation],
     rows = np.asarray(ops.project(cur, tuple(fr_cols or (0,))).data[:cur.count])
     out = np.zeros((cur.count, len(rule.head.args)), np.int32)
     fcol = {t: i for i, t in enumerate(frontier)}
-    ftuples = [tuple(int(x) for x in r[:len(frontier)]) for r in rows]
+    # skolem ids are a function of the frontier tuple, so dictionary lookups
+    # only need to run once per DISTINCT frontier row, not once per trigger
+    if frontier and cur.count:
+        uniq, inv = np.unique(rows[:, :len(frontier)], axis=0,
+                              return_inverse=True)
+        ftuples = [tuple(int(x) for x in u) for u in uniq]
+    else:
+        uniq = np.zeros((1 if cur.count else 0, 0), np.int32)
+        inv = np.zeros(cur.count, np.intp)
+        ftuples = [()] * len(uniq)
     for i, t in enumerate(rule.head.args):
         if is_var(t) and t in fcol:
             out[:, i] = rows[:, fcol[t]]
         elif is_var(t):  # existential
-            out[:, i] = [dic.skolem((rule.name, t.name, ft))
-                         for ft in ftuples]
+            ids = np.fromiter((dic.skolem((rule.name, t.name, ft))
+                               for ft in ftuples), np.int32, len(ftuples))
+            out[:, i] = ids[inv]
         else:
             out[:, i] = dic.encode(t)
     return Relation.from_numpy(out), triggers

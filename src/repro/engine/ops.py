@@ -415,6 +415,19 @@ def anti_keep_core(data, hay_sorted, cols, pallas: bool | None = None):
     return jnp.logical_and(valid, jnp.logical_not(found))
 
 
+def merge_diff_core(A, B_sorted, out_cap: int, pallas: bool | None = None):
+    """Sorted set-difference: rows of block A (lexsorted) minus rows of
+    lexsorted block B, compacted into a fresh (out_cap, ar) PAD block.
+    Mirrors ``merge_core``'s binary-search discipline — every A row is one
+    lexicographic membership probe into B, no sort pass — and preserves A's
+    order (compaction keeps relative order).  Returns (out, n_kept); overflow
+    is ``n_kept > out_cap``, checked by the caller."""
+    keep = anti_keep_core(A, B_sorted, tuple(range(A.shape[1])),
+                          pallas=pallas)
+    n = jnp.sum(keep).astype(jnp.int32)
+    return compact_core(A, keep, out_cap), n
+
+
 def merge_core(A, B, na, nb):
     """Merge sorted block B (bcap rows, nb valid) into sorted block A
     (out_cap rows, na valid).  Duplicate rows may appear within and across
@@ -653,6 +666,42 @@ def antijoin(rel: Relation, hay: Relation, cols=None) -> Relation:
 
 
 # ---------------------------------------------------------------------------
+# semijoin (DRed restriction): keep rows whose key-tuple occurs in a sorted
+# haystack relation — the inverted Def. 23 pre-restriction used by deletion
+# propagation (only facts already in the store can be over-deleted)
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _semi_count_fn(cap, ar, hcap, har, cols):
+    @jax.jit
+    def f(data, hay_sorted):
+        valid = data[:, 0] != PAD
+        found = member_mask_core(project_core(data, cols), hay_sorted)
+        keep = jnp.logical_and(valid, found)
+        return jnp.sum(keep), keep
+    return f
+
+
+def semijoin(rel: Relation, hay: Relation, cols=None) -> Relation:
+    """Rows of rel whose ``cols``-tuple IS in hay (the antijoin's
+    complement).  Same sortedness contract: the haystack lexsort is skipped
+    when marked, and the output keeps ``rel``'s marker."""
+    if rel.count == 0 or hay.count == 0:
+        return Relation.empty(rel.arity)
+    cols = tuple(cols) if cols is not None else tuple(range(rel.arity))
+    assert len(cols) == hay.arity
+    hs = lexsort_rows(hay)
+    n, keep = _semi_count_fn(rel.capacity, rel.arity, hs.capacity,
+                             hay.arity, cols)(rel.data, hs.data)
+    n = int(n)
+    HOST_SYNC_STATS.count_pulls += 1
+    if n == rel.count:
+        return rel
+    cap = next_pow2(n)
+    out = _compact_fn(rel.capacity, rel.arity, cap)(rel.data, keep)
+    return Relation(out, n, rel.sorted_by)
+
+
+# ---------------------------------------------------------------------------
 # union / append / merge
 # ---------------------------------------------------------------------------
 def union(a: Relation, b: Relation, dedupe: bool = True) -> Relation:
@@ -710,5 +759,36 @@ def merge_union(a: Relation, b: Relation) -> Relation:
     out_cap = next_pow2(n)
     out = _merge_fn(out_cap, b.capacity, a.arity)(
         fit_rows(a.data, out_cap), b.data, a.count, b.count)
+    SORT_STATS.merges += 1
+    return Relation(out, n, lex_order(a.arity))
+
+
+@lru_cache(maxsize=None)
+def _diff_fn(cap, hcap, ar, out_cap, pallas):
+    @jax.jit
+    def f(A, B):
+        return merge_diff_core(A, B, out_cap, pallas=pallas)
+    return f
+
+
+def merge_diff(a: Relation, b: Relation) -> Relation:
+    """Incremental sorted set-difference ``a - b`` (full rows), the deletion
+    counterpart of ``merge_union``: both sides are lexsorted first (free when
+    they carry the marker), every ``a`` row is one binary-search membership
+    probe into ``b``, and the surviving rows compact in place — no re-sort of
+    the store.  Output is lexsorted and marked."""
+    assert a.arity == b.arity
+    if a.count == 0 or b.count == 0:
+        return lexsort_rows(a)
+    a = lexsort_rows(a)
+    b = lexsort_rows(b)
+    # keep a's buffer capacity: the difference always fits, and preserving
+    # the shape keeps downstream jit signatures stable across delete calls
+    # (a shrink-to-fit here would recompile every store consumer)
+    out_cap = a.capacity
+    out, n = _diff_fn(a.capacity, b.capacity, a.arity, out_cap,
+                      use_pallas())(a.data, b.data)
+    n = int(n)
+    HOST_SYNC_STATS.count_pulls += 1
     SORT_STATS.merges += 1
     return Relation(out, n, lex_order(a.arity))

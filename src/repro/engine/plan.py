@@ -305,9 +305,18 @@ class _Caps:
     the distributed executor all counts (and hence all planned capacities)
     are per shard."""
 
-    def __init__(self, fp, stores, ndev: int = 1):
+    def __init__(self, fp, stores, ndev: int = 1, lean: bool = False):
+        """``lean`` starts the delta-family guesses at the floor instead of
+        ~2x the store scale: incremental-maintenance calls enter with deltas
+        of a few rows, and from-scratch-sized delta/tail/join buffers make
+        every fixpoint iteration pay O(store)-scale sorts for O(|delta|)
+        work (measured ~20x slower per iteration).  Overflow doubling still
+        grows them when a cascade turns out deep; memoized capacities
+        dominate either guess."""
         self.fp = fp
         base = max([c for _, c in stores.values()] + [1])
+        if lean:
+            base = 1
         self.store = {}
         self.delta = {}
         self.tail = {}
@@ -351,6 +360,16 @@ class _Caps:
             self.bucket[key] = (_CAP_MEMO.get((self.fp, "bucket", key), 0)
                                 or self._bucket_guess)
         return self.bucket[key]
+
+    def seed_delta(self, pred, count):
+        """Widen ``pred``'s delta bucket to hold an externally-seeded delta.
+        Incremental materialization enters the round loop with insertions as
+        the FIRST delta (not a round output sized by an overflow flag), so
+        the seed must fit a priori — memoized capacities still dominate when
+        they are already large enough."""
+        self.delta[pred] = max(self.delta_cap(pred),
+                               next_pow2(max(int(count), 1)))
+        return self.delta[pred]
 
     def double(self, label):
         kind, name = label

@@ -1,0 +1,279 @@
+"""Incremental maintenance (``materialize_delta``) + PR-8 bugfix tests.
+
+Covers the DRed deletion path (over-delete / rescue / re-derive), the
+seeded semi-naive insertion path (fused and two-phase), warm capacity-plan
+reuse across delta calls, and the three satellite bugfixes: unambiguous
+null rendering in ``Dictionary.decode``, unconditional base-relation dedup
+in ``EngineKB.__init__``, and vectorized skolem allocation in
+``execute_rule``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import unify
+from repro.core.terms import Null, parse_atom, parse_program
+from repro.engine import ops, plan
+from repro.engine.dictionary import Dictionary
+from repro.engine.materialize import EngineKB, materialize
+from repro.engine.ops import HOST_SYNC_STATS
+from repro.engine.relation import Relation
+
+TC = "e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)"
+
+
+def _chain(n, pred="e", prefix="n"):
+    return [parse_atom(f"{pred}({prefix}{i}, {prefix}{i + 1})")
+            for i in range(n)]
+
+
+def _scratch(P, facts):
+    kb = EngineKB(parse_program(P) if isinstance(P, str) else P, facts)
+    materialize(kb)
+    return kb
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: Dictionary null rendering is unambiguous
+# ---------------------------------------------------------------------------
+def test_dictionary_null_roundtrip():
+    d = Dictionary()
+    c = d.encode("_sk1")          # a genuine constant that LOOKS like a null
+    n = d.skolem(("r", "Z", (c,)))
+    assert n < 0 and c >= 0
+    assert d.decode(n) == Null(-n)
+    assert d.decode(c) == "_sk1"
+    assert d.decode(n) != d.decode(c)          # the PR-8 collision, fixed
+    for i in (c, n):
+        assert d.encode(d.decode(i)) == i      # roundtrip both ranges
+    assert d.skolem(("r", "Z", (c,))) == n     # memoized
+
+
+def test_dictionary_rejects_foreign_null():
+    d = Dictionary()
+    with pytest.raises(ValueError):
+        d.encode(Null(7))          # never allocated by this dictionary
+
+
+def test_decoded_facts_render_nulls_as_nulls():
+    kb = _scratch("r(X, Y) -> s(Y, Z)", [parse_atom("r(a, _sk1)")])
+    facts = kb.decode_facts()
+    nulls = {t for f in facts for t in f.args if isinstance(t, Null)}
+    assert len(nulls) == 1                     # one existential frontier
+    consts = {t for f in facts for t in f.args if not isinstance(t, Null)}
+    assert "_sk1" in consts                    # the constant survives as-is
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: base dedup on both store paths
+# ---------------------------------------------------------------------------
+def test_base_dedup_both_store_paths(monkeypatch):
+    dup = [parse_atom("e(a, b)")] * 3 + _chain(4, prefix="c")
+    counts = {}
+    for flag in ("0", "1"):
+        monkeypatch.setenv("REPRO_SORTED_STORE", flag)
+        kb = EngineKB(parse_program(TC), dup)
+        assert kb.rels["e"].count == 5          # deduped at load on BOTH paths
+        materialize(kb)
+        counts[flag] = kb.num_facts()
+    assert counts["0"] == counts["1"]
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: vectorized skolem projection allocates per distinct frontier
+# ---------------------------------------------------------------------------
+def test_skolem_vectorized_null_count():
+    P = "r(X, Y) -> s(X, Z)"
+    facts = [parse_atom(f"r(a{i % 4}, b{i})") for i in range(32)]
+    kb = _scratch(P, facts)
+    # 4 distinct frontier values X -> 4 nulls, regardless of 32 rows
+    assert kb.dict.num_nulls == 4
+    assert len(kb.decode_facts()) == 32 + 4
+
+
+# ---------------------------------------------------------------------------
+# tentpole: insertions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused", ("0", "1"))
+def test_insert_only_matches_scratch(fused, monkeypatch):
+    monkeypatch.setenv("REPRO_FUSED", fused)
+    base = _chain(10)
+    kb = _scratch(TC, base)
+    extra = [parse_atom("e(n10, n11)"), parse_atom("e(x, n0)")]
+    st = kb.materialize_delta(insertions=extra)
+    assert st.extra["delta"] and st.extra["inserted"] == 2
+    assert kb.decode_facts() == _scratch(TC, base + extra).decode_facts()
+
+
+def test_insert_into_unknown_predicate(monkeypatch):
+    monkeypatch.setenv("REPRO_FUSED", "0")
+    kb = _scratch(TC, _chain(3))
+    kb.materialize_delta(insertions=[parse_atom("iso(a, b)")])
+    assert parse_atom("iso(a, b)") in kb.decode_facts()
+
+
+def test_insert_existing_fact_is_noop():
+    kb = _scratch(TC, _chain(5))
+    before = kb.decode_facts()
+    st = kb.materialize_delta(insertions=[parse_atom("e(n1, n2)")])
+    assert kb.decode_facts() == before
+    assert st.extra["propagated"] == 0
+
+
+# ---------------------------------------------------------------------------
+# tentpole: deletions (DRed)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused", ("0", "1"))
+def test_delete_only_matches_scratch(fused, monkeypatch):
+    monkeypatch.setenv("REPRO_FUSED", fused)
+    base = _chain(10)
+    kb = _scratch(TC, base)
+    st = kb.materialize_delta(deletions=[parse_atom("e(n4, n5)")])
+    assert st.extra["over_deleted"] > 0
+    ref = _scratch(TC, base[:4] + base[5:])
+    assert kb.decode_facts() == ref.decode_facts()
+
+
+def test_delete_rederivable_fact_is_noop():
+    # T(n0,n1) is derived from base e(n0,n1): DRed over-deletes it, the
+    # rescue pass re-derives it, and the store is unchanged.
+    kb = _scratch(TC, _chain(6))
+    before = kb.decode_facts()
+    st = kb.materialize_delta(deletions=[parse_atom("T(n0, n1)")])
+    assert kb.decode_facts() == before
+    assert st.extra["over_deleted"] >= 1 and st.extra["rescued"] >= 1
+
+
+def test_delete_with_alternative_path():
+    # two parallel edges derive T(a,c); deleting one leaves T(a,c) alive
+    base = [parse_atom(s) for s in
+            ("e(a, b)", "e(b, c)", "e(a, c)")]
+    kb = _scratch(TC, base)
+    kb.materialize_delta(deletions=[parse_atom("e(b, c)")])
+    ref = _scratch(TC, [base[0], base[2]])
+    assert kb.decode_facts() == ref.decode_facts()
+    assert parse_atom("T(a, c)") in kb.decode_facts()
+
+
+def test_delete_absent_fact_is_noop():
+    kb = _scratch(TC, _chain(4))
+    before = kb.decode_facts()
+    st = kb.materialize_delta(deletions=[parse_atom("e(zz, qq)")])
+    assert kb.decode_facts() == before
+    assert st.extra["over_deleted"] == 0
+
+
+def test_mixed_insert_delete_same_call(monkeypatch):
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    base = _chain(8)
+    kb = _scratch(TC, base)
+    st = kb.materialize_delta(insertions=[parse_atom("e(m, n0)")],
+                              deletions=[parse_atom("e(n3, n4)")])
+    ref = _scratch(TC, [parse_atom("e(m, n0)")] + base[:3] + base[4:])
+    assert kb.decode_facts() == ref.decode_facts()
+    assert st.extra["inserted"] == 1 and st.extra["deleted"] == 1
+
+
+def test_fact_in_both_batches_survives():
+    base = _chain(5)
+    kb = _scratch(TC, base)
+    kb.materialize_delta(insertions=[parse_atom("e(n2, n3)")],
+                         deletions=[parse_atom("e(n2, n3)")])
+    assert kb.decode_facts() == _scratch(TC, base).decode_facts()
+
+
+def test_insert_then_delete_roundtrip():
+    base = _chain(7)
+    kb = _scratch(TC, base)
+    before = kb.decode_facts()
+    f = parse_atom("e(q, n0)")
+    kb.insert_facts([f])
+    assert kb.decode_facts() != before
+    kb.delete_facts([f])
+    assert kb.decode_facts() == before
+
+
+# ---------------------------------------------------------------------------
+# existential programs (null isomorphism, not equality)
+# ---------------------------------------------------------------------------
+def test_existential_incremental_isomorphic():
+    P = "r(X, Y) -> s(Y, Z)\ns(X, Y) & r(Y, W) -> s(X, V)"
+    kb = _scratch(P, [parse_atom("r(a, b)")])
+    kb.materialize_delta(insertions=[parse_atom("r(c, a)")])
+    ref = _scratch(P, [parse_atom("r(a, b)"), parse_atom("r(c, a)")])
+    assert unify.equivalent(kb.decode_facts(), ref.decode_facts())
+
+
+def test_existential_delete_isomorphic():
+    P = "r(X, Y) -> s(Y, Z)"
+    base = [parse_atom("r(a, b)"), parse_atom("r(c, d)")]
+    kb = _scratch(P, base)
+    kb.materialize_delta(deletions=[parse_atom("r(c, d)")])
+    ref = _scratch(P, base[:1])
+    assert unify.equivalent(kb.decode_facts(), ref.decode_facts())
+
+
+# ---------------------------------------------------------------------------
+# warm plan reuse: second delta call must not retry or re-plan
+# ---------------------------------------------------------------------------
+def test_shallow_delta_stays_two_phase(monkeypatch):
+    # a disconnected edge converges in 2 rounds — below the fused handoff
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb = _scratch(TC, _chain(8))
+    st = kb.materialize_delta(insertions=[parse_atom("e(w0, w1)")])
+    assert st.rounds <= 3 and "fused" not in st.extra
+
+
+def test_deep_cascade_hands_off_to_fused_warm_no_retries(monkeypatch):
+    # PREPENDING a chain edge cascades one closure hop per round (appending
+    # converges in 2 — every ancestor already reaches the old end), so the
+    # cascade must hand off to the fused fixpoint; a second same-shaped
+    # delta must reuse the warm capacity plans (zero retries)
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    monkeypatch.setattr(plan, "_CAP_MEMO", {})
+    base = _chain(16)
+    kb = _scratch(TC, base)
+    w1 = parse_atom("e(w1, n0)")
+    st = kb.materialize_delta(insertions=[w1])
+    assert st.extra.get("fused")
+    assert kb.decode_facts() == _scratch(TC, base + [w1]).decode_facts()
+    r0 = HOST_SYNC_STATS.fused_retries
+    w2 = parse_atom("e(w2, w1)")
+    st2 = kb.materialize_delta(insertions=[w2])
+    assert st2.extra.get("fused")
+    assert HOST_SYNC_STATS.fused_retries == r0
+    assert kb.decode_facts() == _scratch(TC, base + [w1, w2]).decode_facts()
+
+
+# ---------------------------------------------------------------------------
+# new ops: merge_diff / semijoin
+# ---------------------------------------------------------------------------
+def _rel(rows):
+    a = np.asarray(rows, np.int32)
+    return Relation.from_numpy(a.reshape(len(rows), -1))
+
+
+def test_merge_diff_basic():
+    a = _rel([[1, 2], [3, 4], [5, 6], [7, 8]])
+    b = _rel([[3, 4], [7, 8], [9, 9]])
+    d = ops.merge_diff(a, b)
+    assert d.rows_set() == {(1, 2), (5, 6)} and d.count == 2
+    assert d.is_lexsorted
+    assert ops.merge_diff(a, a).count == 0
+    assert ops.merge_diff(a, _rel([[0, 0]])).rows_set() == a.rows_set()
+
+
+def test_merge_diff_empty_sides():
+    a = _rel([[1, 2]])
+    assert ops.merge_diff(a, Relation.empty(2)).rows_set() == {(1, 2)}
+    assert ops.merge_diff(Relation.empty(2), a).count == 0
+
+
+def test_semijoin_basic():
+    a = _rel([[1, 2], [3, 4], [5, 6]])
+    b = _rel([[3, 4], [9, 9]])
+    assert ops.semijoin(a, b).rows_set() == {(3, 4)}
+    assert ops.semijoin(a, Relation.empty(2)).count == 0
+    assert ops.semijoin(Relation.empty(2), b).count == 0
+    # column-projected probe: match on first column only
+    c = _rel([[3], [5]])
+    assert ops.semijoin(a, c, cols=(0,)).rows_set() == {(3, 4), (5, 6)}
