@@ -2,7 +2,7 @@
 (iBench STB/ONT shape): non-linear rules, existentials, heavy joins."""
 from __future__ import annotations
 
-from benchmarks.common import emit, peak_rss_mb, timed, warmup
+from benchmarks.common import emit, timed, warmup
 from repro.data.kb_sources import CHASEBENCH, chasebench_facts
 from repro.engine.materialize import EngineKB, materialize
 
@@ -14,8 +14,7 @@ def run(smoke: bool = False):
         kb = EngineKB(CHASEBENCH, B)
         st, t = timed(materialize, kb, mode=mode, max_rounds=40)
         emit(f"chasebench.STB-like.{mode}", t, st.derived,
-             triggers=st.triggers, rounds=st.rounds,
-             mem_mb=f"{peak_rss_mb():.0f}")
+             triggers=st.triggers, rounds=st.rounds)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import os
 
-from benchmarks.common import emit, peak_rss_mb, timed, warmup
+from benchmarks.common import emit, timed, warmup
 from repro.core.terms import parse_atom, parse_program
 from repro.data.kb_sources import LUBM_L, LUBM_LE, lubm_facts
 from repro.engine import ops
@@ -74,19 +74,19 @@ def run(smoke: bool = False):
         kb = EngineKB(P, B)
         st, t = timed(materialize, kb, mode="seminaive")
         emit(f"datalog.{name}.chase", t, st.derived, triggers=st.triggers,
-             rounds=st.rounds, mem_mb=f"{peak_rss_mb():.0f}")
+             rounds=st.rounds)
 
         # TG no-opt: round filtering, no Def. 23 prefilter
         kb = EngineKB(P, B)
         st, t = timed(materialize, kb, mode="tg_noopt")
         emit(f"datalog.{name}.tg_noopt", t, st.derived, triggers=st.triggers,
-             rounds=st.rounds, mem_mb=f"{peak_rss_mb():.0f}")
+             rounds=st.rounds)
 
         # TG m+r
         kb = EngineKB(P, B)
         st, t = timed(materialize, kb, mode="tg")
         emit(f"datalog.{name}.tg_m_r", t, st.derived, triggers=st.triggers,
-             rounds=st.rounds, mem_mb=f"{peak_rss_mb():.0f}")
+             rounds=st.rounds)
 
     run_tc(smoke)
 

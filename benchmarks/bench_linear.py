@@ -6,7 +6,7 @@ cleaning" and "w/ cleaning"; plus the TG computation time (column Comp) and
 TG sizes (#N, #E, D)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, peak_rss_mb, timed, warmup
+from benchmarks.common import emit, timed, warmup
 from repro.core.tg_linear import min_linear, tglinear
 from repro.data.kb_sources import LUBM_LI, linear_subset, lubm_facts, \
     rho_df_facts, RHO_DF
@@ -26,7 +26,7 @@ def run(smoke: bool = False):
         kb = EngineKB(P, B)
         st, t_chase = timed(materialize, kb, mode="seminaive")
         emit(f"linear.{name}.chase", t_chase, st.derived,
-             triggers=st.triggers, mem_mb=f"{peak_rss_mb():.0f}")
+             triggers=st.triggers)
 
         # TG computation (Comp column)
         (G, _), t_comp = timed(lambda: (min_linear(tglinear(P)), None))
@@ -39,7 +39,7 @@ def run(smoke: bool = False):
             emit(f"linear.{name}.tg_{tag}", t_comp + t_r, st2.derived,
                  comp_us=f"{t_comp*1e6:.0f}", triggers=st2.triggers,
                  nodes=stats["nodes"], edges=stats["edges"],
-                 depth=stats["depth"], mem_mb=f"{peak_rss_mb():.0f}")
+                 depth=stats["depth"])
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 subproperty closure, domain/range typing (WebPIE/Inferray comparison shape)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, peak_rss_mb, timed, warmup
+from benchmarks.common import emit, timed, warmup
 from repro.data.kb_sources import RHO_DF, rho_df_facts
 from repro.engine.materialize import EngineKB, materialize
 
@@ -17,7 +17,7 @@ def run(smoke: bool = False):
         kb = EngineKB(RHO_DF, B)
         st, t = timed(materialize, kb, mode=mode)
         emit(f"rdfs.rhodf.{mode}", t, st.derived, triggers=st.triggers,
-             rounds=st.rounds, mem_mb=f"{peak_rss_mb():.0f}")
+             rounds=st.rounds)
 
 
 if __name__ == "__main__":

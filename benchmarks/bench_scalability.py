@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import os
 
-from benchmarks.common import emit, peak_rss_mb, timed, warmup
+from benchmarks.common import emit, timed, warmup
 from repro.data.kb_sources import LUBM_L, lubm_facts
 from repro.engine.materialize import EngineKB, materialize
 
@@ -25,10 +25,10 @@ def run(smoke: bool = False):
         total = kb.num_facts()
         # numbers, not preformatted strings: BENCH_*.json consumers plot
         # these fields directly
+        # memory lands in the uniform peak_rss_mb column emit() adds
         emit(f"scalability.LUBM-L.univ{n_univ}", t, st.derived,
              base=len(B), total=total,
-             facts_per_s=round(st.derived / max(t, 1e-9)),
-             mem_mb=round(peak_rss_mb(), 1))
+             facts_per_s=round(st.derived / max(t, 1e-9)))
 
 
 if __name__ == "__main__":

@@ -28,7 +28,11 @@ def timed(fn, *args, **kw):
 
 
 def emit(name: str, seconds: float, derived: int, **extra):
-    """CSV row: name,us_per_call,derived[,k=v...]"""
+    """CSV row: name,us_per_call,derived[,k=v...]
+
+    Every row carries a ``peak_rss_mb`` column (process high-water by
+    default); benches that measure a subprocess pass their own value."""
+    extra.setdefault("peak_rss_mb", round(peak_rss_mb(), 1))
     cols = [name, f"{seconds * 1e6:.0f}", str(derived)]
     cols += [f"{k}={v}" for k, v in extra.items()]
     print(",".join(cols), flush=True)

@@ -25,7 +25,7 @@ import sys
 
 from benchmarks import (bench_chasebench, bench_datalog, bench_delta,
                         bench_dist, bench_fused, bench_linear, bench_rdfs,
-                        bench_scalability, bench_triggers)
+                        bench_scalability, bench_scale, bench_triggers)
 from benchmarks import common
 
 TABLES = {
@@ -38,6 +38,7 @@ TABLES = {
     "tc": bench_fused.run,               # fused vs two-phase host syncs
     "dist": bench_dist.run,              # sharded executor scaling (ndev)
     "delta": bench_delta.run,            # incremental maintenance cost
+    "scale": bench_scale.run,            # 10^5..10^8 dtype/pallas sweep
 }
 
 
@@ -50,13 +51,18 @@ def main() -> None:
     ap.add_argument("--out", default=None,
                     help="JSON output path (default BENCH_smoke.json "
                          "with --smoke, none otherwise)")
+    ap.add_argument("--huge", action="store_true",
+                    help="extend the scale sweep to 10^8 facts")
     args = ap.parse_args()
 
     which = args.tables or list(TABLES)
     common.reset_results()
     print("name,us_per_call,derived,extra...")
     for name in which:
-        TABLES[name](smoke=args.smoke)
+        if name == "scale":
+            TABLES[name](smoke=args.smoke, huge=args.huge)
+        else:
+            TABLES[name](smoke=args.smoke)
 
     def write_payload(path, rows, **extra):
         payload = {
@@ -92,6 +98,13 @@ def main() -> None:
                       else "BENCH_delta.json",
                       [r for r in common.RESULTS
                        if r["name"].startswith("delta.")])
+    if "scale" in which:
+        # and for the 10^5..10^8 dtype/pallas scale trajectory
+        write_payload("BENCH_scale_smoke.json" if args.smoke
+                      else "BENCH_scale.json",
+                      [r for r in common.RESULTS
+                       if r["name"].startswith("scale.")],
+                      huge=args.huge)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.terms import Atom, parse_program
+from repro.engine.relation import id_range, store_dtype
 
 
 # ---------------------------------------------------------------------------
@@ -240,11 +241,68 @@ def tc_chain_facts(n_chain: int = 128, chord_every: int = 8):
 def tc_random_facts(n_nodes: int = 400, n_edges: int = 1200, seed: int = 3):
     """Wide random-graph TC base: few rounds, large joins and deltas, so
     the per-round exchange/join cost — not the round count — dominates
-    (the scenario where sharding the sort/merge work pays off)."""
+    (the scenario where sharding the sort/merge work pays off).  Edge
+    endpoints are generated at the dictionary's id dtype so the data
+    round-trips through the narrow store without a silent upcast."""
     rng = np.random.default_rng(seed)
     edges = np.unique(
-        rng.integers(0, n_nodes, (n_edges, 2)).astype(np.int64), axis=0)
+        rng.integers(0, n_nodes, (n_edges, 2)).astype(store_dtype()), axis=0)
     return [Atom("e", (f"v{a}", f"v{b}")) for a, b in edges.tolist()]
+
+
+# ---------------------------------------------------------------------------
+# streamed (chunked-ndarray) scale scenarios: base facts yielded as
+# ("pred", (n, ar) int ndarray) chunks for EngineKB.from_stream — a 10^8-fact
+# KB never exists as decoded Python tuples
+# ---------------------------------------------------------------------------
+def _check_node_range(n_nodes: int, dtype) -> np.dtype:
+    dt = np.dtype(dtype) if dtype is not None else store_dtype()
+    lo, hi = id_range(dt)
+    if n_nodes - 1 > hi:
+        raise OverflowError(
+            f"{n_nodes} nodes exceed the {dt} store id range [0, {hi}]; "
+            "use a wider REPRO_STORE_DTYPE")
+    return dt
+
+
+def tc_wide_chunks(n_chains: int, chain_len: int = 4,
+                   chunk_rows: int = 1 << 20, dtype=None):
+    """Wide-TC base as edge chunks: ``n_chains`` DISJOINT chains of
+    ``chain_len`` edges each.  The closure adds exactly
+    ``chain_len * (chain_len + 1) / 2`` facts per chain (see
+    :func:`tc_wide_total`), so the total fact count scales linearly with
+    ``n_chains`` while the fixpoint stays ``chain_len`` rounds deep — the
+    regime where sort/merge/probe throughput, not round count, is the
+    engine's cost.  Yields ``("e", (n, 2) ndarray)`` chunks of at most
+    ``chunk_rows`` rows in the store id dtype."""
+    dt = _check_node_range(n_chains * (chain_len + 1), dtype)
+    total = n_chains * chain_len
+    start = 0
+    while start < total:
+        stop = min(start + chunk_rows, total)
+        idx = np.arange(start, stop, dtype=np.int64)
+        chain, off = np.divmod(idx, chain_len)
+        src = chain * (chain_len + 1) + off
+        yield "e", np.stack([src, src + 1], axis=1).astype(dt)
+        start = stop
+
+
+def tc_wide_total(n_chains: int, chain_len: int = 4) -> int:
+    """Total fact count (base edges + closure) of the tc_wide scenario."""
+    return n_chains * chain_len + n_chains * chain_len * (chain_len + 1) // 2
+
+
+def tc_random_chunks(n_nodes: int, n_edges: int, seed: int = 3,
+                     chunk_rows: int = 1 << 20, dtype=None):
+    """Random-graph TC base as edge chunks (duplicate edges possible across
+    chunks — the streamed ingest dedups them against the store)."""
+    dt = _check_node_range(n_nodes, dtype)
+    rng = np.random.default_rng(seed)
+    left = n_edges
+    while left > 0:
+        n = min(left, chunk_rows)
+        yield "e", rng.integers(0, n_nodes, (n, 2)).astype(dt)
+        left -= n
 
 
 # ---------------------------------------------------------------------------
@@ -265,4 +323,13 @@ SCENARIOS = {
     "TC-CHAIN": (TC, lambda scale: tc_chain_facts(n_chain=64 * scale)),
     "TC-RAND": (TC, lambda scale: tc_random_facts(
         n_nodes=200 * scale, n_edges=600 * scale)),
+}
+
+# streamed counterparts: (program, scale -> iterator of (pred, ndarray)
+# chunks) for EngineKB.from_stream — scale is the TOTAL fact target (base +
+# closure for TC-WIDE), so bases never exist as python tuples
+STREAM_SCENARIOS = {
+    "TC-WIDE": (TC, lambda total: tc_wide_chunks(max(total // 14, 1))),
+    "TC-RAND": (TC, lambda total: tc_random_chunks(
+        n_nodes=max(total // 3, 1), n_edges=total)),
 }

@@ -82,10 +82,8 @@ from repro.engine.plan import (_MAX_RETRIES, _absorb_traced, _cached_program,
                                _Caps, _exec_rule_traced, _linear_tail,
                                _select_state, compile_rule_plan,
                                program_fingerprint)
-from repro.engine.relation import PAD, Relation, lex_order
+from repro.engine.relation import Relation, lex_order, pad_of, pad_value
 from repro.launch.mesh import axis_size
-
-_NP_PAD = np.iinfo(np.int32).max
 
 
 # ---------------------------------------------------------------------------
@@ -143,7 +141,7 @@ def _route_to_buckets(rows, target, ndev, bucket_cap, sort_cols=None):
     pre-sorted runs (see ``_merge_runs``).  Returns ((ndev, bucket_cap, ar)
     buckets, overflow_count)."""
     cap, ar = rows.shape
-    valid = rows[:, 0] != PAD
+    valid = rows[:, 0] != pad_of(rows)
     target = jnp.where(valid, target, ndev)          # invalid -> trash bucket
     if sort_cols is None:
         order = jnp.argsort(target)
@@ -157,9 +155,10 @@ def _route_to_buckets(rows, target, ndev, bucket_cap, sort_cols=None):
                      ndev * bucket_cap)
     overflow = jnp.logical_and(t_sorted < ndev, pos >= bucket_cap)
     slot = jnp.where(overflow, ndev * bucket_cap, slot)
-    buckets = jnp.full((ndev * bucket_cap + 1, ar), PAD, jnp.int32)
+    buckets = jnp.full((ndev * bucket_cap + 1, ar), pad_of(rows), rows.dtype)
     buckets = buckets.at[slot].set(jnp.where((t_sorted < ndev)[:, None],
-                                             rows_sorted, PAD), mode="drop")
+                                             rows_sorted, pad_of(rows)),
+                                   mode="drop")
     return (buckets[:ndev * bucket_cap].reshape(ndev, bucket_cap, ar),
             jnp.sum(overflow))
 
@@ -202,11 +201,13 @@ def _merge_runs(blk, ndev, perm):
         return blk
     cap = n // ndev
     rot = blk if identity else blk[:, list(perm)]
-    if ndev > _MERGE_MAX_WAYS or ar > 2 or (ar == 2 and not ops._pack_ok()):
+    if ndev > _MERGE_MAX_WAYS or ar > 2 or (
+            ar == 2 and not ops._pack_ok(blk.dtype)):
         out = ops.lexsort_core(rot, pallas=False)
     else:
         runs = [rot[i * cap:(i + 1) * cap] for i in range(ndev)]
-        valids = [blk[i * cap:(i + 1) * cap, 0] != PAD for i in range(ndev)]
+        valids = [blk[i * cap:(i + 1) * cap, 0] != pad_of(blk)
+                  for i in range(ndev)]
         iota = jnp.arange(cap, dtype=jnp.int32)
         with jax.experimental.enable_x64():
             keys = ([r[:, 0] for r in runs] if ar == 1
@@ -223,10 +224,11 @@ def _merge_runs(blk, ndev, perm):
                         keys[j], keys[i],
                         side="right" if j < i else "left").astype(jnp.int32)
                 ranks.append(rank)
-        out = jnp.full((n + 1, ar), PAD, jnp.int32)
+        out = jnp.full((n + 1, ar), pad_of(blk), blk.dtype)
         for i, r in enumerate(runs):
             pos = jnp.where(valids[i], ranks[i], n)    # PAD rows -> trash
-            out = out.at[pos].set(jnp.where(valids[i][:, None], r, PAD),
+            out = out.at[pos].set(jnp.where(valids[i][:, None], r,
+                                            pad_of(blk)),
                                   mode="drop")
         out = out[:n]
     if identity:
@@ -579,7 +581,7 @@ def _build_dist_fixpoint(mesh, axis, ndev, s_preds, o_preds, caps, active,
             seen = jnp.logical_or(
                 ops.member_mask_core(sel, base[pred]),
                 ops.member_mask_core(sel, tails[pred]))
-            valid = rows[:, 0] != PAD
+            valid = rows[:, 0] != pad_of(rows)
             return jnp.logical_and(valid, jnp.logical_not(seen))
 
         # hoisted loop-invariant store-side exchanges: routed (and
@@ -620,7 +622,8 @@ def _build_dist_fixpoint(mesh, axis, ndev, s_preds, o_preds, caps, active,
             jnp.zeros((n_body,), jnp.int32),
             (jax.lax.psum(jnp.stack(init_flags).astype(jnp.int32), axis)
              if init_flags else jnp.zeros((0,), jnp.int32))])
-        d_counts0 = tuple(jnp.sum(deltas0[p][:, 0] != PAD).astype(jnp.int32)
+        d_counts0 = tuple(jnp.sum(deltas0[p][:, 0] != pad_of(deltas0[p])
+                                  ).astype(jnp.int32)
                           for p in s_preds)
         live0 = jax.lax.psum(sum(d_counts0), axis)
 
@@ -687,7 +690,8 @@ def _build_dist_fixpoint(mesh, axis, ndev, s_preds, o_preds, caps, active,
                 else:           # in S but not derived by any site: drains
                     new_w[pred] = tails[pred]
                     new_wc[pred] = wcnt[pred]
-                    new_d[pred] = jnp.full_like(deltas[pred], PAD)
+                    new_d[pred] = jnp.full_like(deltas[pred],
+                                                pad_of(deltas[pred]))
                     new_dc[pred] = jnp.zeros((), jnp.int32)
             # overlapped production for iteration k+1: depends only on the
             # fresh deltas, NOT on the tail merges above, so the exchange
@@ -729,7 +733,8 @@ def _build_dist_fixpoint(mesh, axis, ndev, s_preds, o_preds, caps, active,
                                    rounds < max_rounds)
 
         state = (
-            tuple(jnp.full((tail_caps[p], base[p].shape[1]), PAD, jnp.int32)
+            tuple(jnp.full((tail_caps[p], base[p].shape[1]),
+                           pad_of(base[p]), base[p].dtype)
                   for p in s_preds),
             tuple(jnp.zeros((), jnp.int32) for _ in s_preds),
             tuple(deltas0[p] for p in s_preds),
@@ -771,6 +776,7 @@ class ShardedKB:
     def __init__(self, kb, preds, ndev):
         self.ndev = ndev
         self.arity = {p: kb.rels[p].arity for p in preds}
+        self.dtype = {p: np.dtype(kb.rels[p].dtype) for p in preds}
         self.data = {}               # pred -> device/np (ndev*cap, ar)
         self.counts = {}             # pred -> np (ndev,) int32
         self.per_shard_max = {}
@@ -794,7 +800,8 @@ class ShardedKB:
         """Materialize the per-shard blocks at the planner's store caps."""
         for p, parts in self.data.items():
             cap = caps.store[p]
-            out = np.full((self.ndev, cap, self.arity[p]), _NP_PAD, np.int32)
+            out = np.full((self.ndev, cap, self.arity[p]),
+                          pad_value(self.dtype[p]), self.dtype[p])
             for d, part in enumerate(parts):
                 out[d, :len(part)] = part
             self.data[p] = out.reshape(self.ndev * cap, self.arity[p])
@@ -815,7 +822,7 @@ class ShardedKB:
             parts = [blocks[d, :int(self.counts[p][d])]
                      for d in range(self.ndev)]
             rows = (np.concatenate(parts) if parts
-                    else np.zeros((0, ar), np.int32))
+                    else np.zeros((0, ar), self.dtype[p]))
             if len(rows):
                 rows = rows[np.lexsort(rows.T[::-1])]
             kb.rels[p] = Relation.from_numpy(rows, sorted_by=lex_order(ar))
@@ -828,7 +835,7 @@ def refit_shards(data, ndev, new_cap):
     ar = arr.shape[-1]
     arr = arr.reshape(ndev, -1, ar)
     old = arr.shape[1]
-    out = np.full((ndev, new_cap, ar), _NP_PAD, np.int32)
+    out = np.full((ndev, new_cap, ar), pad_value(arr.dtype), arr.dtype)
     out[:, :min(old, new_cap)] = arr[:, :min(old, new_cap)]
     return out.reshape(ndev * new_cap, ar)
 
@@ -928,7 +935,8 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
         the planner cap, or an all-PAD block for quiescent S-preds."""
         if pred not in deltas:
             cap = caps.delta_cap(pred)
-            return np.full((ndev * cap, skb.arity[pred]), _NP_PAD, np.int32)
+            return np.full((ndev * cap, skb.arity[pred]),
+                           pad_value(skb.dtype[pred]), skb.dtype[pred])
         return fit_delta(pred)
 
     def fold_tails(s_preds_, w_datas, wcnts):
@@ -957,7 +965,8 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
             while cap < new_counts.max(initial=0):
                 cap *= 2
             caps.store[p] = cap
-            out = np.full((ndev, cap, ar), _NP_PAD, np.int32)
+            out = np.full((ndev, cap, ar), pad_value(skb.dtype[p]),
+                          skb.dtype[p])
             for s, pt in enumerate(parts):
                 out[s, :len(pt)] = pt
             skb.data[p] = out.reshape(ndev * cap, ar)

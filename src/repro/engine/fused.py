@@ -44,9 +44,10 @@ from repro.engine.plan import (_MAX_RETRIES, _absorb_traced, _cached_program,
                                _Caps, _exec_rule_traced, _linear_tail,
                                _select_state, compile_rule_plan,
                                program_fingerprint, RulePlan)
-from repro.engine.relation import PAD, Relation, lex_order
+from repro.engine.relation import Relation, lex_order, pad_of
 
-__all__ = ["RulePlan", "compile_rule_plan", "materialize_fused"]
+__all__ = ["RulePlan", "compile_rule_plan", "materialize_fused",
+           "lower_fused_programs"]
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +177,7 @@ def _build_fixpoint(s_preds, o_preds, caps, active, use_prefilter, pallas,
             seen = jnp.logical_or(
                 ops.member_mask_core(sel, base[pred]),
                 ops.member_mask_core(sel, tails[pred]))
-            valid = rows[:, 0] != PAD
+            valid = rows[:, 0] != pad_of(rows)
             return jnp.logical_and(valid, jnp.logical_not(seen))
 
         def body(state):
@@ -214,7 +215,8 @@ def _build_fixpoint(s_preds, o_preds, caps, active, use_prefilter, pallas,
                 else:   # in S but not derived by any active rule: drains
                     new_w[pred] = tails[pred]
                     new_wc[pred] = wcnt[pred]
-                    new_deltas[pred] = jnp.full_like(deltas[pred], PAD)
+                    new_deltas[pred] = jnp.full_like(deltas[pred],
+                                                     pad_of(deltas[pred]))
                     new_dcounts[pred] = jnp.zeros((), jnp.int32)
             ovf_vec = (jnp.stack(ovfs) if ovfs
                        else jnp.zeros((0,), jnp.bool_))
@@ -373,15 +375,17 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
                     tuple(stores[p] for p in s_preds),
                     tuple(jnp.array(ops.fit_rows(w[p][0], caps.tail_cap(p)))
                           if w[p] else
-                          jnp.full((caps.tail_cap(p), kb.arities[p]), PAD,
-                                   jnp.int32) for p in s_preds),
+                          jnp.full((caps.tail_cap(p), kb.arities[p]),
+                                   kb.rels[p].pad, kb.rels[p].dtype)
+                          for p in s_preds),
                     tuple(jnp.int32(w[p][1] if w[p] else 0)
                           for p in s_preds),
                     tuple(jnp.array(ops.fit_rows(deltas[p][0],
                                                  caps.delta_cap(p)))
                           if p in deltas else
-                          jnp.full((caps.delta_cap(p), kb.arities[p]), PAD,
-                                   jnp.int32) for p in s_preds),
+                          jnp.full((caps.delta_cap(p), kb.arities[p]),
+                                   kb.rels[p].pad, kb.rels[p].dtype)
+                          for p in s_preds),
                     tuple(jnp.int32(deltas[p][1] if p in deltas else 0)
                           for p in s_preds),
                     tuple(stores[p] for p in o_preds),
@@ -446,3 +450,87 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
                               lex_order(kb.rels[p].arity))
     caps.memoize()
     return st
+
+
+# ---------------------------------------------------------------------------
+# program lowering for the roofline analysis (no execution)
+# ---------------------------------------------------------------------------
+def lower_fused_programs(kb, mode: str = "tg"):
+    """Lower (without running) the fused executor's programs for ``kb`` at
+    the capacity planner's current shapes: ``{name: (hlo_text,
+    cost_analysis)}`` for the steady-state round program and — when the
+    program has a linear tail — the while_loop fixpoint program.
+
+    This is what ``analysis.roofline`` feeds to the trip-count-aware HLO
+    walk to publish bytes/flops-per-fact for the actual executable the
+    benchmarks time.  Call it AFTER a real materialization so the capacity
+    memo holds converged buckets (the planner then reproduces the shapes
+    the timed run compiled at).  Returns None outside the fused fragment."""
+    import numpy as np
+
+    program = kb.program
+    plans = {}
+    for rule in program.rules:
+        plan = compile_rule_plan(rule, kb.dict)
+        if plan is None:
+            return None
+        plans[id(rule)] = plan
+    preds = tuple(sorted(kb.rels))
+    use_prefilter = mode == "tg"
+    pallas = ops.use_pallas()
+    fp = program_fingerprint((plans[id(r)].key for r in program.rules),
+                             sum(kb.rels[p].count for p in preds))
+    caps = _Caps(fp, {p: (kb.rels[p].data, kb.rels[p].count) for p in preds})
+    loop_plans = [plans[id(r)] for r in program.rules]
+    derived = {pl.head_pred for pl in loop_plans}
+    active = tuple((plans[id(r)], j) for r in program.rules
+                   for j, a in enumerate(r.body) if a.pred in derived)
+    if not active:
+        return {}
+
+    def rel_aval(cap, p):
+        return jax.ShapeDtypeStruct((cap, kb.arities[p]), kb.rels[p].dtype)
+
+    i32 = jax.ShapeDtypeStruct((), np.int32)
+
+    def lowered_pair(fn, *avals):
+        compiled = fn.lower(*avals).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0] if cost else {}
+        return compiled.as_text(), dict(cost or {})
+
+    out = {}
+    delta_in = tuple(sorted({plan.body_preds[jd] for plan, jd in active}))
+    fn, _, _ = _build_round(preds, caps, active, delta_in, use_prefilter,
+                            pallas)
+    out["round"] = lowered_pair(
+        fn,
+        tuple(rel_aval(caps.store[p], p) for p in preds),
+        tuple(i32 for _ in preds),
+        tuple(rel_aval(caps.delta_cap(p), p) for p in delta_in))
+    # the fixpoint's steady-state live set is usually smaller than the
+    # early-round one (aux predicates quiesce): fall back to singleton live
+    # sets so the lowered fixpoint matches the phase the driver actually
+    # spends its time in
+    tail = _linear_tail(loop_plans, delta_in)
+    if tail is None:
+        for p in sorted(derived):
+            tail = _linear_tail(loop_plans, (p,))
+            if tail is not None:
+                break
+    if tail is not None:
+        s_preds, t_active = tail
+        o_preds = tuple(p for p in preds if p not in s_preds)
+        ffn, _ = _build_fixpoint(s_preds, o_preds, caps, t_active,
+                                 use_prefilter, pallas, 10_000, False)
+        out["fixpoint"] = lowered_pair(
+            ffn,
+            tuple(rel_aval(caps.store[p], p) for p in s_preds),
+            tuple(rel_aval(caps.tail_cap(p), p) for p in s_preds),
+            tuple(i32 for _ in s_preds),
+            tuple(rel_aval(caps.delta_cap(p), p) for p in s_preds),
+            tuple(i32 for _ in s_preds),
+            tuple(rel_aval(caps.store[p], p) for p in o_preds),
+            i32)
+    return out

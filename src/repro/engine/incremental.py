@@ -84,13 +84,14 @@ def _encode_facts(kb, facts) -> Dict[str, Relation]:
         rows[f.pred].append(kb.dict.encode_many(f.args))
         if f.pred not in kb.arities:
             kb.arities[f.pred] = f.arity
-            kb.rels[f.pred] = Relation.empty(max(f.arity, 1))
+            kb.rels[f.pred] = Relation.empty(max(f.arity, 1),
+                                             dtype=kb.dict.id_dtype)
             kb.base[f.pred] = kb.rels[f.pred]
     out = {}
     for p, rws in rows.items():
         ar = kb.arities[p]
         rel = Relation.from_numpy(
-            np.asarray(rws, np.int32).reshape(len(rws), ar))
+            np.asarray(rws, kb.dict.id_dtype).reshape(len(rws), ar))
         out[p] = ops.dedup(rel)
     return out
 

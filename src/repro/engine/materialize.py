@@ -41,20 +41,22 @@ import numpy as np
 from repro.core.terms import Atom, Program, Rule, Var, is_var
 from repro.engine import ops
 from repro.engine.dictionary import Dictionary
-from repro.engine.relation import PAD, Relation
+from repro.engine.relation import Relation
 
 
 # ---------------------------------------------------------------------------
 # KB container
 # ---------------------------------------------------------------------------
 class EngineKB:
-    def __init__(self, program: Program, base_facts):
+    def __init__(self, program: Program, base_facts, dtype=None):
+        """``dtype``: store dtype for this KB's dictionary ids and relation
+        columns (default: the process ``REPRO_STORE_DTYPE``)."""
         self.program = program.normalize()
-        self.dict = Dictionary()
+        self.dict = Dictionary(id_dtype=dtype)
         rows = defaultdict(list)
         self.arities = dict(self.program.arities)
         for f in base_facts:
-            rows[f.pred].append(self.dict.encode_many(f.args))
+            rows[f.pred].append(f.args)
             self.arities.setdefault(f.pred, f.arity)
         self.rels: Dict[str, Relation] = {}
         # the base (extensional) facts, tracked separately from the derived
@@ -63,8 +65,7 @@ class EngineKB:
         self.base: Dict[str, Relation] = {}
         for p, ar in self.arities.items():
             if p in rows:
-                rel = Relation.from_numpy(
-                    np.asarray(rows[p], np.int32).reshape(len(rows[p]), ar))
+                rel = Relation.from_numpy(self._encode_block(rows[p], ar))
                 # set semantics hold on every path: duplicate base facts are
                 # collapsed regardless of REPRO_SORTED_STORE, so fact counts
                 # and trigger stats agree across flag settings.  (With the
@@ -74,8 +75,73 @@ class EngineKB:
                 rel = ops.dedup(rel)
                 self.rels[p] = rel
             else:
-                self.rels[p] = Relation.empty(max(ar, 1))
+                self.rels[p] = Relation.empty(max(ar, 1),
+                                              dtype=self.dict.id_dtype)
             self.base[p] = self.rels[p]
+
+    def _encode_block(self, fact_args, ar: int) -> np.ndarray:
+        """Vectorized encoding of a list of same-arity argument tuples
+        (one ``np.unique`` pass via ``Dictionary.encode_columns``); falls
+        back to the per-term loop for unorderable mixed terms (Nulls,
+        int/str mixes)."""
+        n = len(fact_args)
+        if n == 0 or ar == 0:
+            return np.zeros((n, ar), self.dict.id_dtype)
+        try:
+            return self.dict.encode_columns(
+                np.array(fact_args, dtype=object))
+        except TypeError:
+            enc = [self.dict.encode_many(args) for args in fact_args]
+            return np.asarray(enc, self.dict.id_dtype).reshape(n, ar)
+
+    # -- streamed ingest ----------------------------------------------------
+    def ingest_rows(self, pred: str, rows: np.ndarray) -> None:
+        """Fold one chunk of base rows for ``pred`` into the store: encode
+        the (n, ar) term/ndarray block in one vectorized pass, dedup it,
+        antijoin against what the store already holds, and merge the fresh
+        rows in with the incremental sorted merge.  Chunked callers never
+        hold more than one decoded chunk in memory — the store only ever
+        grows by sorted merges."""
+        rows = np.asarray(rows) if not isinstance(rows, np.ndarray) else rows
+        if rows.ndim == 1:
+            rows = rows.reshape(-1, 1)
+        enc = self.dict.encode_columns(rows)
+        n, ar = enc.shape
+        self.arities.setdefault(pred, ar)
+        if pred not in self.rels:
+            self.rels[pred] = Relation.empty(max(ar, 1),
+                                             dtype=self.dict.id_dtype)
+        if n == 0:
+            self.base[pred] = self.rels[pred]
+            return
+        rel = ops.dedup(Relation.from_numpy(enc))
+        store = self.rels[pred]
+        if store.count == 0:
+            self.rels[pred] = rel
+        else:
+            fresh = ops.antijoin(rel, store)
+            if fresh.count:
+                self.rels[pred] = ops.merge_union(store, fresh)
+        self.base[pred] = self.rels[pred]
+
+    @classmethod
+    def from_stream(cls, program: Program, chunks, dtype=None) -> "EngineKB":
+        """Build a KB from an iterable of ``(pred, (n, ar) ndarray)`` chunks
+        (e.g. the ``*_chunks`` generators in ``repro.data.kb_sources``).
+        Equivalent to ``EngineKB(program, atoms)`` over the concatenated
+        chunks, but peak memory is one chunk plus the padded store — the
+        10^8-fact ingest path."""
+        kb = cls(program, (), dtype=dtype)
+        for pred, rows in chunks:
+            kb.ingest_rows(pred, rows)
+        return kb
+
+    @classmethod
+    def from_arrays(cls, program: Program, tables, dtype=None) -> "EngineKB":
+        """Build a KB from ``{pred: (n, ar) ndarray}`` (or an iterable of
+        pairs) of already-materialized term arrays."""
+        items = tables.items() if hasattr(tables, "items") else tables
+        return cls.from_stream(program, items, dtype=dtype)
 
     def materialize_delta(self, insertions=(), deletions=(), **kw):
         """Incrementally maintain an already-materialized store: see
@@ -202,7 +268,7 @@ def execute_rule(kb: EngineKB, rule: Rule, inputs: List[Relation],
     frontier = [t for t in rule.head.args if is_var(t) and t in var_col]
     fr_cols = [var_col[t] for t in frontier]
     rows = np.asarray(ops.project(cur, tuple(fr_cols or (0,))).data[:cur.count])
-    out = np.zeros((cur.count, len(rule.head.args)), np.int32)
+    out = np.zeros((cur.count, len(rule.head.args)), dic.id_dtype)
     fcol = {t: i for i, t in enumerate(frontier)}
     # skolem ids are a function of the frontier tuple, so dictionary lookups
     # only need to run once per DISTINCT frontier row, not once per trigger
@@ -219,7 +285,8 @@ def execute_rule(kb: EngineKB, rule: Rule, inputs: List[Relation],
             out[:, i] = rows[:, fcol[t]]
         elif is_var(t):  # existential
             ids = np.fromiter((dic.skolem((rule.name, t.name, ft))
-                               for ft in ftuples), np.int32, len(ftuples))
+                               for ft in ftuples), dic.id_dtype,
+                              len(ftuples))
             out[:, i] = ids[inv]
         else:
             out[:, i] = dic.encode(t)

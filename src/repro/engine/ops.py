@@ -1,4 +1,9 @@
-"""Vectorized relational operators on padded int32 relations.
+"""Vectorized relational operators on padded narrow-dtype relations.
+
+Rows carry the store dtype (``REPRO_STORE_DTYPE``: int16/int32/int64 —
+see ``repro.engine.relation``); every core reads its PAD sentinel and key
+widths off the input arrays, so one set of traced functions serves all
+store widths (jit retraces per dtype via its aval cache).
 
 Execution contracts
 -------------------
@@ -62,7 +67,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.relation import PAD, Relation, lex_order, next_pow2
+from repro.engine.relation import (PAD, Relation, lex_order, next_pow2,
+                                   pad_of)
 
 
 # ---------------------------------------------------------------------------
@@ -193,7 +199,7 @@ def lexsort_core(data, pallas: bool | None = None):
         pallas = use_pallas()
     if pallas and ar == 1 and _is_pow2(cap):
         return keysort_core(data, 0, pallas=True)
-    if ar == 2 and _pack_ok():
+    if ar == 2 and _pack_ok(data.dtype):
         with jax.experimental.enable_x64():
             order = jnp.argsort(pack_rows2(data)).astype(jnp.int32)
         return data[order]
@@ -225,14 +231,14 @@ def dedup_mask_core(sorted_data, pallas: bool | None = None):
     prev = jnp.roll(sorted_data, 1, axis=0)
     neq = jnp.any(sorted_data != prev, axis=1)
     neq = neq.at[0].set(True)
-    valid = sorted_data[:, 0] != PAD
+    valid = sorted_data[:, 0] != pad_of(sorted_data)
     return jnp.logical_and(neq, valid)
 
 
 def filter_mask_core(data, eq_pairs=(), const_pairs=()):
     """Row-selection mask: valid rows meeting column-equality (repeated
     vars) and column-constant constraints."""
-    valid = data[:, 0] != PAD
+    valid = data[:, 0] != pad_of(data)
     for a, b in eq_pairs:
         valid &= data[:, a] == data[:, b]
     for c, v in const_pairs:
@@ -247,16 +253,16 @@ def compact_core(data, mask, out_cap: int):
     ``sum(mask) > out_cap``."""
     pos = jnp.cumsum(mask) - 1
     idx = jnp.where(mask, pos, out_cap)
-    out = jnp.full((out_cap + 1, data.shape[1]), PAD, jnp.int32)
+    out = jnp.full((out_cap + 1, data.shape[1]), pad_of(data), data.dtype)
     out = out.at[idx].set(data, mode="drop")
     return out[:out_cap]
 
 
 def project_core(data, cols):
     """Column gather; invalid (PAD) rows stay fully PAD."""
-    valid = data[:, 0] != PAD
+    valid = data[:, 0] != pad_of(data)
     out = data[:, jnp.array(cols, jnp.int32)]
-    return jnp.where(valid[:, None], out, PAD)
+    return jnp.where(valid[:, None], out, pad_of(data))
 
 
 def join_count_core(ldata, rdata_sorted, lkey: int, rkey: int):
@@ -266,7 +272,7 @@ def join_count_core(ldata, rdata_sorted, lkey: int, rkey: int):
     rk = rdata_sorted[:, rkey]
     lo = jnp.searchsorted(rk, lk, side="left")
     hi = jnp.searchsorted(rk, lk, side="right")
-    per = jnp.where(lk != PAD, hi - lo, 0)
+    per = jnp.where(lk != pad_of(ldata), hi - lo, 0)
     cum = jnp.cumsum(per) - per           # exclusive prefix
     return jnp.sum(per), per, cum, lo
 
@@ -284,7 +290,7 @@ def join_gather_core(ldata, rdata, per, cum, lo, total, out_cap: int):
     j = jnp.clip(lo[i] + (t - cum[i]), 0, rcap - 1)
     valid = t < total
     out = jnp.concatenate([ldata[i], rdata[j]], axis=1)
-    return jnp.where(valid[:, None], out, PAD)
+    return jnp.where(valid[:, None], out, pad_of(ldata))
 
 
 def _range_narrow(col, key, lo, hi):
@@ -312,20 +318,31 @@ def _range_narrow(col, key, lo, hi):
     return bs(False), bs(True)
 
 
+# pack target per store dtype: two narrow columns bitcast into one key of
+# double the width.  int64 rows have no 128-bit key — they take the
+# per-column binary-search path instead (the honest wide-baseline cost).
+_PACK_KEY = {
+    np.dtype(np.int16): jnp.int32,
+    np.dtype(np.int32): jnp.int64,
+}
+
+
 def pack_rows2(rows):
-    """Pack (cap, 2) non-negative int32 rows into one int64 key per row that
-    preserves lexicographic order (dictionary ids are non-negative and PAD =
-    int32 max, so packed PAD rows stay lex-maximal).  Turns the per-column
-    binary-search loops into single XLA-native sort/searchsorted calls for
-    the dominant arity-2 case.
+    """Pack (cap, 2) non-negative narrow rows into one double-width key per
+    row that preserves lexicographic order (dictionary ids are non-negative
+    and PAD = dtype max, so packed PAD rows stay lex-maximal).  Turns the
+    per-column binary-search loops into single XLA-native sort/searchsorted
+    calls for the dominant arity-2 case.
 
     Implemented as a bitcast (low word first — little-endian on CPU/GPU)
     rather than shift-add: with the global x64 flag off, int64 *constants*
     are canonicalized to int32 during lowering, but a constant-free bitcast
-    survives; ``enable_x64`` covers the trace-time aval creation."""
+    survives; ``enable_x64`` covers the trace-time aval creation (a no-op
+    for the int16 -> int32 pack, which never leaves 32-bit)."""
+    out_dt = _PACK_KEY[np.dtype(rows.dtype)]
     with jax.experimental.enable_x64():
         pair = jnp.stack([rows[:, 1], rows[:, 0]], axis=1)
-        return jax.lax.bitcast_convert_type(pair, jnp.int64)
+        return jax.lax.bitcast_convert_type(pair, out_dt)
 
 
 def lex_range_core(hay_sorted, probe):
@@ -339,16 +356,24 @@ def lex_range_core(hay_sorted, probe):
     return lo, hi
 
 
-def _pack_ok() -> bool:
-    """int64 packing needs a backend with native 64-bit support."""
-    return jax.default_backend() != "tpu"
+def _pack_ok(dtype=np.int32) -> bool:
+    """Whether arity-2 rows of ``dtype`` can pack into one scalar key:
+    int16 pairs pack to int32 (native everywhere); int32 pairs pack to
+    int64 (needs a backend with native 64-bit support); int64 pairs have
+    no 128-bit key dtype and fall back to per-column binary search."""
+    dt = np.dtype(dtype)
+    if dt == np.int16:
+        return True
+    if dt == np.int32:
+        return jax.default_backend() != "tpu"
+    return False
 
 
 def _lex_keys(hay, probe):
     """Order-preserving scalar keys for rows of arity <= 2, else None."""
     if hay.shape[1] == 1:
         return hay[:, 0], probe[:, 0]
-    if hay.shape[1] == 2 and _pack_ok():
+    if hay.shape[1] == 2 and _pack_ok(hay.dtype):
         return pack_rows2(hay), pack_rows2(probe)
     return None
 
@@ -379,7 +404,7 @@ def member_mask_core(probe_rows, hay_sorted):
     """Row membership of each probe row in a lexsorted haystack (PAD probe
     rows report non-member: PAD columns never match valid haystack rows and
     match only haystack PAD padding, which is excluded either way)."""
-    valid = probe_rows[:, 0] != PAD
+    valid = probe_rows[:, 0] != pad_of(probe_rows)
     keys = _lex_keys(hay_sorted, probe_rows)
     if keys is not None:
         hk, pk = keys
@@ -405,7 +430,7 @@ def anti_keep_core(data, hay_sorted, cols, pallas: bool | None = None):
     route through the Pallas binary-search kernel when ``pallas``."""
     if pallas is None:
         pallas = use_pallas()
-    valid = data[:, 0] != PAD
+    valid = data[:, 0] != pad_of(data)
     if (pallas and hay_sorted.shape[1] == 1 and len(cols) == 1
             and _is_pow2(data.shape[0]) and _is_pow2(hay_sorted.shape[0])):
         K = _kernels()
@@ -452,7 +477,7 @@ def merge_core(A, B, na, nb):
     cnt = jnp.cumsum(h)[:out_cap]            # #{valid B rows lex< A[j]}
     pos_a = jnp.where(ia < na, ia + cnt, out_cap)
     pos_b = jnp.where(valid_b, ib + p, out_cap)
-    out = jnp.full((out_cap, ar), PAD, jnp.int32)
+    out = jnp.full((out_cap, ar), pad_of(A), A.dtype)
     out = out.at[pos_a].set(A, mode="drop")
     out = out.at[pos_b].set(B, mode="drop")
     return out
@@ -503,7 +528,7 @@ def dedup(rel: Relation) -> Relation:
     """Sort (skipped on a lexsorted input) + adjacent-unique + compact.
     Output is lexsorted and marked."""
     if rel.count == 0:
-        return Relation.empty(rel.arity)
+        return Relation.empty(rel.arity, dtype=rel.dtype)
     s = lexsort_rows(rel)
     n, mask = _dedup_count_fn(s.capacity, s.arity, use_pallas())(s.data)
     n = int(n)
@@ -600,7 +625,7 @@ def sm_join(l: Relation, r: Relation, lkey: int, rkey: int):
     [l cols..., r cols...] and ``matches`` is the trigger count.  Input sorts
     are skipped for relations already sorted by their join key."""
     if l.count == 0 or r.count == 0:
-        return Relation.empty(l.arity + r.arity), 0
+        return Relation.empty(l.arity + r.arity, dtype=l.dtype), 0
     ls = sort_by(l, lkey)
     rs = sort_by(r, rkey)
     total, per, cum, lo = _join_count_fn(
@@ -618,12 +643,12 @@ def sm_join(l: Relation, r: Relation, lkey: int, rkey: int):
 def cross(l: Relation, r: Relation):
     """Cartesian product (rare in practice; needed for disconnected bodies)."""
     if l.count == 0 or r.count == 0:
-        return Relation.empty(l.arity + r.arity), 0
+        return Relation.empty(l.arity + r.arity, dtype=l.dtype), 0
     total = l.count * r.count
     out_cap = next_pow2(total)
     li = jnp.repeat(jnp.arange(l.count), r.count, total_repeat_length=total)
     ri = jnp.tile(jnp.arange(r.count), l.count)[:total]
-    out = jnp.full((out_cap, l.arity + r.arity), PAD, jnp.int32)
+    out = jnp.full((out_cap, l.arity + r.arity), pad_of(l.data), l.data.dtype)
     rows = jnp.concatenate([l.data[li], r.data[ri]], axis=1)
     out = jax.lax.dynamic_update_slice(out, rows, (0, 0))
     return Relation(out, total), total
@@ -674,7 +699,7 @@ def antijoin(rel: Relation, hay: Relation, cols=None) -> Relation:
 def _semi_count_fn(cap, ar, hcap, har, cols):
     @jax.jit
     def f(data, hay_sorted):
-        valid = data[:, 0] != PAD
+        valid = data[:, 0] != pad_of(data)
         found = member_mask_core(project_core(data, cols), hay_sorted)
         keep = jnp.logical_and(valid, found)
         return jnp.sum(keep), keep
@@ -686,7 +711,7 @@ def semijoin(rel: Relation, hay: Relation, cols=None) -> Relation:
     complement).  Same sortedness contract: the haystack lexsort is skipped
     when marked, and the output keeps ``rel``'s marker."""
     if rel.count == 0 or hay.count == 0:
-        return Relation.empty(rel.arity)
+        return Relation.empty(rel.arity, dtype=rel.dtype)
     cols = tuple(cols) if cols is not None else tuple(range(rel.arity))
     assert len(cols) == hay.arity
     hs = lexsort_rows(hay)
@@ -713,7 +738,7 @@ def union(a: Relation, b: Relation, dedupe: bool = True) -> Relation:
         return a
     n = a.count + b.count
     cap = next_pow2(n)
-    data = jnp.full((cap, a.arity), PAD, jnp.int32)
+    data = jnp.full((cap, a.arity), pad_of(a.data), a.data.dtype)
     data = jax.lax.dynamic_update_slice(data, a.data[:a.count], (0, 0))
     data = jax.lax.dynamic_update_slice(data, b.data[:b.count], (a.count, 0))
     out = Relation(data, n)
@@ -729,7 +754,8 @@ def fit_rows(data, out_cap):
     if cap > out_cap:
         return data[:out_cap]
     return jnp.concatenate(
-        [data, jnp.full((out_cap - cap, data.shape[1]), PAD, jnp.int32)])
+        [data, jnp.full((out_cap - cap, data.shape[1]), pad_of(data),
+                        data.dtype)])
 
 
 @lru_cache(maxsize=None)

@@ -56,7 +56,7 @@ import jax.numpy as jnp
 
 from repro.core.terms import is_var
 from repro.engine import ops
-from repro.engine.relation import PAD, next_pow2
+from repro.engine.relation import next_pow2, pad_of
 
 _MAX_RETRIES = 40
 
@@ -192,9 +192,9 @@ def _project_head_core(data, spec):
         if kind == "col":
             cols.append(data[:, v])
         else:
-            cols.append(jnp.full((data.shape[0],), v, jnp.int32))
-    valid = data[:, 0] != PAD
-    return jnp.where(valid[:, None], jnp.stack(cols, axis=1), PAD)
+            cols.append(jnp.full((data.shape[0],), v, data.dtype))
+    valid = data[:, 0] != pad_of(data)
+    return jnp.where(valid[:, None], jnp.stack(cols, axis=1), pad_of(data))
 
 
 def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
@@ -263,7 +263,7 @@ def _exec_rule_traced(plan, inputs, pre_data, join_caps, pallas,
         if eq2:
             mask = ops.filter_mask_core(cur, eq2, ())
             cur = ops.compact_core(cur, mask, cap)
-    triggers = jnp.sum(cur[:, 0] != PAD).astype(jnp.int32)
+    triggers = jnp.sum(cur[:, 0] != pad_of(cur)).astype(jnp.int32)
     return _project_head_core(cur, plan.head_spec), triggers, ovfs
 
 
@@ -383,6 +383,15 @@ class _Caps:
             self.bucket[name] *= 2
         else:
             self.join[name] *= 2
+
+    def planned_rows(self) -> int:
+        """Total planned buffer rows across every capacity kind touched so
+        far — the padded-buffer footprint an executor allocates is this
+        times arity times the store dtype's itemsize, which is what the
+        narrow-dtype store halves."""
+        return (sum(self.store.values()) + sum(self.delta.values())
+                + sum(self.tail.values()) + sum(self.join.values())
+                + sum(self.bucket.values()))
 
     def memoize(self):
         while len(_CAP_MEMO) >= _CAP_MEMO_LIMIT:

@@ -1,10 +1,26 @@
-"""Padded fixed-capacity relations (int32 column tensors) with pow-2 capacity
-bucketing: the XLA-compatible representation of GLog's columnar tables.
+"""Padded fixed-capacity relations (narrow-dtype column tensors) with pow-2
+capacity bucketing: the XLA-compatible representation of GLog's columnar
+tables.
 
-A ``Relation`` holds ``data`` (capacity, arity) int32 and a fill ``count``.
-Rows past ``count`` are padding (PAD).  All engine ops are shape-stable; data-
-dependent output sizes use a jitted count pass + host-side pow-2 bucket choice
-+ a jitted materialize pass (bounded recompilation).
+A ``Relation`` holds ``data`` (capacity, arity) integer rows and a fill
+``count``.  Rows past ``count`` are padding (the dtype's max value).  All
+engine ops are shape-stable; data-dependent output sizes use a jitted count
+pass + host-side pow-2 bucket choice + a jitted materialize pass (bounded
+recompilation).
+
+Store dtype
+-----------
+The store dtype is configurable (``REPRO_STORE_DTYPE``: ``int16`` /
+``int32`` (default) / ``int64``) and threads end-to-end through the engine:
+dictionary ids, relation columns, the sort/merge/probe cores, and the
+capacity planner's padded buffers all carry it.  Narrower rows halve the
+memory traffic of the three ops that dominate at scale (sort, merge_union,
+probe) and halve the padded-buffer footprint the capacity planner
+allocates; ``int64`` is kept as the wide A/B baseline for the scale
+benchmarks (it requires a process with ``JAX_ENABLE_X64=1`` — x64-off jax
+silently canonicalizes int64 arrays to int32).  The PAD sentinel is always
+the dtype's max value, so lex-max padding invariants are dtype-independent;
+the dictionary reserves it (ids must stay strictly below PAD).
 
 Sortedness invariant
 --------------------
@@ -19,7 +35,7 @@ incremental sorted merges.
 """
 from __future__ import annotations
 
-import math
+import os
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -27,7 +43,52 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# legacy alias: the PAD sentinel of the default (int32) store dtype.  Dtype-
+# generic code must use ``pad_value``/``pad_of`` instead.
 PAD = jnp.iinfo(jnp.int32).max
+
+STORE_DTYPES = {
+    "int16": np.dtype(np.int16),
+    "int32": np.dtype(np.int32),
+    "int64": np.dtype(np.int64),
+}
+
+
+def store_dtype() -> np.dtype:
+    """The process-default store dtype (``REPRO_STORE_DTYPE``, default
+    int32).  int64 stores need an x64-enabled jax process: with the global
+    x64 flag off, jax canonicalizes int64 arrays to int32 at creation, which
+    would silently narrow the "wide" A/B baseline back to int32."""
+    name = os.environ.get("REPRO_STORE_DTYPE", "int32")
+    dt = STORE_DTYPES.get(name)
+    if dt is None:
+        raise ValueError(f"REPRO_STORE_DTYPE={name!r}: expected one of "
+                         f"{sorted(STORE_DTYPES)}")
+    if dt == np.int64 and not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "REPRO_STORE_DTYPE=int64 requires an x64-enabled jax process "
+            "(set JAX_ENABLE_X64=1 before jax is imported); otherwise jax "
+            "canonicalizes the int64 store back to int32")
+    return dt
+
+
+def pad_value(dtype) -> int:
+    """The PAD sentinel of a store dtype: its max value (lex-maximal, so PAD
+    rows sort last under every comparator the engine uses)."""
+    return int(np.iinfo(np.dtype(dtype)).max)
+
+
+def pad_of(data) -> int:
+    """PAD sentinel for an array's dtype (python int: usable as a fill value
+    or weak-typed comparison scalar inside traced code)."""
+    return pad_value(data.dtype)
+
+
+def id_range(dtype) -> Tuple[int, int]:
+    """(min, max) dictionary-id range representable in a store dtype: the
+    PAD sentinel (dtype max) is reserved, negative ids are skolem nulls."""
+    info = np.iinfo(np.dtype(dtype))
+    return int(info.min), int(info.max) - 1
 
 
 def next_pow2(n: int) -> int:
@@ -41,7 +102,7 @@ def lex_order(arity: int) -> Tuple[int, ...]:
 
 @dataclass
 class Relation:
-    data: jax.Array          # (capacity, arity) int32, rows >= count are PAD
+    data: jax.Array          # (capacity, arity) ints, rows >= count are PAD
     count: int               # python int (host-side fill level)
     sorted_by: Optional[Tuple[int, ...]] = None  # known sort order, or None
 
@@ -54,6 +115,14 @@ class Relation:
         return self.data.shape[1]
 
     @property
+    def dtype(self) -> np.dtype:
+        return np.dtype(self.data.dtype)
+
+    @property
+    def pad(self) -> int:
+        return pad_value(self.data.dtype)
+
+    @property
     def is_lexsorted(self) -> bool:
         """True iff the relation carries the full-lexsort marker."""
         return self.sorted_by == lex_order(self.arity)
@@ -63,19 +132,43 @@ class Relation:
 
     @staticmethod
     def from_numpy(rows: np.ndarray, capacity: int = 0,
-                   sorted_by: Optional[Tuple[int, ...]] = None) -> "Relation":
+                   sorted_by: Optional[Tuple[int, ...]] = None,
+                   dtype=None) -> "Relation":
+        """Build a padded relation from host rows.
+
+        ``dtype``: target store dtype — defaults to the rows' own dtype when
+        that is a supported store dtype, else the process default.  A
+        narrowing conversion range-checks the rows and raises
+        ``OverflowError`` instead of silently corrupting keys."""
+        rows = np.asarray(rows)
+        if dtype is None:
+            if rows.dtype in STORE_DTYPES.values():
+                dtype = rows.dtype
+            else:
+                dtype = store_dtype()
+        dtype = np.dtype(dtype)
         n = rows.shape[0]
+        if n and rows.dtype != dtype and np.issubdtype(rows.dtype,
+                                                       np.integer):
+            lo, hi = id_range(dtype)
+            rmin, rmax = int(rows.min()), int(rows.max())
+            if rmin < lo or rmax > hi:
+                raise OverflowError(
+                    f"rows [{rmin}, {rmax}] exceed the {dtype} store id "
+                    f"range [{lo}, {hi}]")
         cap = max(next_pow2(n), 1, capacity)
         arity = rows.shape[1] if rows.ndim == 2 else 1
-        data = np.full((cap, arity), np.iinfo(np.int32).max, np.int32)
+        data = np.full((cap, arity), pad_value(dtype), dtype)
         if n:
             data[:n] = rows
         return Relation(jnp.asarray(data), n, sorted_by)
 
     @staticmethod
-    def empty(arity: int, capacity: int = 1) -> "Relation":
+    def empty(arity: int, capacity: int = 1, dtype=None) -> "Relation":
+        dtype = np.dtype(dtype) if dtype is not None else store_dtype()
         # an empty relation is trivially sorted by any order
-        return Relation(jnp.full((max(capacity, 1), arity), PAD, jnp.int32),
+        return Relation(jnp.full((max(capacity, 1), arity),
+                                 pad_value(dtype), dtype),
                         0, lex_order(arity))
 
     def rows_set(self):

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.engine.relation import PAD, next_pow2
+from repro.engine.relation import next_pow2, pad_of
 from repro.kernels import bitonic_sort as BS
 from repro.kernels import hash_probe as HP
 from repro.kernels import unique_mask as UM
@@ -89,7 +89,8 @@ def unique_mask(data, tile: int = 1024):
     if m != n:
         # pad with PAD rows: they are masked out by the kernel and sliced off
         data = jnp.concatenate(
-            [data, jnp.full((m - n, data.shape[1]), PAD, data.dtype)])
+            [data, jnp.full((m - n, data.shape[1]), pad_of(data),
+                            data.dtype)])
     return UM.unique_mask(data, tile=t, interpret=INTERPRET)[:n]
 
 

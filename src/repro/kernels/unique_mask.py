@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.engine.relation import PAD
+from repro.engine.relation import pad_of
 
 
 def _unique_kernel(cur_ref, prev_ref, out_ref):
@@ -24,7 +24,7 @@ def _unique_kernel(cur_ref, prev_ref, out_ref):
     first_global = jnp.logical_and(i == 0,
                                    jax.lax.broadcasted_iota(
                                        jnp.int32, neq.shape, 0) == 0)
-    valid = cur[:, 0] != PAD
+    valid = cur[:, 0] != pad_of(cur)
     out_ref[...] = jnp.where(
         jnp.logical_and(valid, jnp.logical_or(neq, first_global)), 1, 0
     ).astype(jnp.int32)
@@ -37,7 +37,7 @@ def unique_mask(data, tile: int = 1024, *, interpret: bool = True):
     # shifted copy supplies row i-1; row -1 is a PAD row (compares unequal
     # to any valid row, equal only to other PAD rows which are masked out)
     shifted = jnp.concatenate(
-        [jnp.full((1, C), PAD, data.dtype), data[:-1]], axis=0)
+        [jnp.full((1, C), pad_of(data), data.dtype), data[:-1]], axis=0)
     grid = (N // tile,)
     return pl.pallas_call(
         functools.partial(_unique_kernel),
