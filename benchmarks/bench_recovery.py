@@ -1,0 +1,103 @@
+"""Fault-tolerance cost table — the trajectory behind
+``BENCH_recovery.json``.
+
+The claim under test: round/phase-boundary checkpointing is cheap enough
+to leave on for long materializations, and resuming does not redo work.
+Per scenario (deep-chain TC and wide random-graph TC):
+
+* ``recovery.<scen>.baseline`` — steady-state fused materialization with
+  checkpointing disabled: the wall-clock floor.
+* ``recovery.<scen>.ckpt``     — the same run saving a durable checkpoint
+  at EVERY boundary (``REPRO_CKPT_EVERY=1``, the most conservative
+  setting): reports the checkpoint count, the bytes of the final
+  checkpoint directory, and ``overhead_frac`` vs the baseline.
+* ``recovery.<scen>.resume``   — the checkpoint store rewound to a
+  mid-run tag, resumed by a fresh KB: reports ``resumed_rounds``,
+  ``redone_rounds`` (total - resumed: the work a crash actually costs),
+  restore-to-done wall, and fact parity with the uninterrupted run.
+
+Rows carry ``parity``/round counters as deterministic gates; wall times
+are machine-dependent trajectory data."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro.data.kb_sources import TC, tc_chain_facts, tc_random_facts
+from repro.engine import recovery
+from repro.engine.materialize import EngineKB, materialize
+
+
+def _dir_bytes(d: str) -> int:
+    total = 0
+    for root, _, files in os.walk(d):
+        total += sum(os.path.getsize(os.path.join(root, f)) for f in files)
+    return total
+
+
+def _timed_run(P, B, **env):
+    saved = {k: os.environ.get(k) for k in env}
+    os.environ.update({k: v for k, v in env.items() if v is not None})
+    for k, v in env.items():
+        if v is None:
+            os.environ.pop(k, None)
+    try:
+        kb = EngineKB(P, B)
+        t0 = time.perf_counter()
+        st = materialize(kb, mode="tg")
+        return kb, st, time.perf_counter() - t0
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _scenario(name: str, P, B) -> None:
+    os.environ.setdefault("REPRO_FUSED", "1")
+    # warm until the capacity memo stops moving (a moving plan means the
+    # next run recompiles), so the timed runs are steady-state
+    from repro.engine import plan
+    prev = None
+    for _ in range(5):
+        _timed_run(P, B, REPRO_CKPT_DIR=None)
+        snap = sorted((str(k), v) for k, v in plan._CAP_MEMO.items())
+        if snap == prev:
+            break
+        prev = snap
+    ref_kb, ref_st, base_s = _timed_run(P, B, REPRO_CKPT_DIR=None)
+    emit(f"recovery.{name}.baseline", base_s, ref_st.derived,
+         rounds=ref_st.rounds)
+
+    with tempfile.TemporaryDirectory(prefix=f"bench_recovery_{name}_") as d:
+        kb, st, ckpt_s = _timed_run(P, B, REPRO_CKPT_DIR=d,
+                                    REPRO_CKPT_KEEP="1000",
+                                    REPRO_CKPT_EVERY="1")
+        mgr = recovery.RecoveryManager(d, keep=1000)
+        tags = mgr.tags()
+        emit(f"recovery.{name}.ckpt", ckpt_s, st.derived,
+             rounds=st.rounds, checkpoints=st.extra.get("checkpoints", 0),
+             ckpt_bytes=_dir_bytes(mgr._path(tags[-1])) if tags else 0,
+             overhead_frac=round(ckpt_s / base_s - 1.0, 3) if base_s else 0,
+             parity=kb.decode_facts() == ref_kb.decode_facts())
+
+        mid = tags[len(tags) // 2] if len(tags) > 1 else tags[-1]
+        for t in tags:
+            if t > mid:
+                mgr.drop(t)
+        kb2, st2, resume_s = _timed_run(P, B, REPRO_CKPT_DIR=d)
+        resumed = st2.extra.get("resumed_rounds", 0)
+        emit(f"recovery.{name}.resume", resume_s, st2.derived,
+             rounds=st2.rounds, resumed_rounds=resumed,
+             redone_rounds=st2.rounds - resumed,
+             parity=kb2.decode_facts() == ref_kb.decode_facts())
+
+
+def run(smoke: bool = False) -> None:
+    n_chain = 64 if smoke else 512
+    n_nodes, n_edges = (48, 150) if smoke else (400, 1200)
+    _scenario("tc_chain", TC, tc_chain_facts(n_chain))
+    _scenario("tc_rand", TC, tc_random_facts(n_nodes, n_edges))

@@ -25,7 +25,8 @@ import sys
 
 from benchmarks import (bench_chasebench, bench_datalog, bench_delta,
                         bench_dist, bench_fused, bench_linear, bench_rdfs,
-                        bench_scalability, bench_scale, bench_triggers)
+                        bench_recovery, bench_scalability, bench_scale,
+                        bench_triggers)
 from benchmarks import common
 
 TABLES = {
@@ -39,6 +40,7 @@ TABLES = {
     "dist": bench_dist.run,              # sharded executor scaling (ndev)
     "delta": bench_delta.run,            # incremental maintenance cost
     "scale": bench_scale.run,            # 10^5..10^8 dtype/pallas sweep
+    "recovery": bench_recovery.run,      # checkpoint overhead + resume cost
 }
 
 
@@ -98,6 +100,12 @@ def main() -> None:
                       else "BENCH_delta.json",
                       [r for r in common.RESULTS
                        if r["name"].startswith("delta.")])
+    if "recovery" in which:
+        # and for the checkpoint-overhead / resume-cost trajectory
+        write_payload("BENCH_recovery_smoke.json" if args.smoke
+                      else "BENCH_recovery.json",
+                      [r for r in common.RESULTS
+                       if r["name"].startswith("recovery.")])
     if "scale" in which:
         # and for the 10^5..10^8 dtype/pallas scale trajectory
         write_payload("BENCH_scale_smoke.json" if args.smoke

@@ -4,6 +4,12 @@ hash-partitioned facts on 8 simulated devices, via the same rule-plan IR
 the single-device executors run.
 
     python examples/distributed_materialize.py
+
+Long runs survive preemption: set ``REPRO_CKPT_DIR=/some/dir`` and every
+executor checkpoints at phase boundaries and resumes from the newest
+valid checkpoint — even at a *different* device count (the restore
+re-partitions by the exchange hash). See README "Fault tolerance &
+recovery".
 """
 import os
 

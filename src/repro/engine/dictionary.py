@@ -240,3 +240,64 @@ class Dictionary:
     @property
     def num_nulls(self):
         return -self._next_null - 1
+
+    # -- transactional ingest / checkpointing -------------------------------
+    def mark(self) -> tuple:
+        """O(1) rollback token for transactional ingest.  Ids grow
+        monotonically and the integer-store numpy arrays are *replaced* on
+        growth (never mutated in place), so holding the current array
+        references plus the two counters freezes this state."""
+        return (self._n_terms, self._next_null, self._int_vals,
+                self._int_ids, self._dec_ids, self._dec_vals)
+
+    def rollback(self, token: tuple) -> None:
+        """Discard every id handed out since ``mark()`` returned ``token``
+        (a failed ingest chunk must not leave half-interned terms behind:
+        later chunks would otherwise intern around ghosts whose ids no
+        store row references)."""
+        n_terms, next_null, iv, ii, di, dv = token
+        for t, i in [kv for kv in self._to_id.items() if kv[1] >= n_terms]:
+            del self._to_id[t]
+            del self._from_id[i]
+        for k in [k for k, i in self._skolem.items() if i <= next_null]:
+            del self._skolem[k]
+        self._n_terms = n_terms
+        self._next_null = next_null
+        self._int_vals, self._int_ids = iv, ii
+        self._dec_ids, self._dec_vals = di, dv
+
+    def state_dict(self) -> dict:
+        """Picklable snapshot of the full interning state (what the engine
+        checkpoints next to the stores: encoded rows are meaningless
+        without the exact id assignment that produced them)."""
+        return {
+            "version": 1,
+            "id_dtype": self.id_dtype.str,
+            "n_terms": self._n_terms,
+            "next_null": self._next_null,
+            "to_id": dict(self._to_id),
+            "skolem": dict(self._skolem),
+            "int_vals": self._int_vals.copy(),
+            "int_ids": self._int_ids.copy(),
+            "dec_ids": self._dec_ids.copy(),
+            "dec_vals": self._dec_vals.copy(),
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Restore a ``state_dict()`` snapshot in place (references to this
+        Dictionary stay valid).  The dtype must match: ids encoded under a
+        different store dtype would not round-trip the PAD reservation."""
+        if np.dtype(state["id_dtype"]) != self.id_dtype:
+            raise ValueError(
+                f"checkpointed dictionary dtype {state['id_dtype']} does "
+                f"not match this process's {self.id_dtype} "
+                "(REPRO_STORE_DTYPE changed between save and restore)")
+        self._n_terms = int(state["n_terms"])
+        self._next_null = int(state["next_null"])
+        self._to_id = dict(state["to_id"])
+        self._from_id = {i: t for t, i in self._to_id.items()}
+        self._skolem = dict(state["skolem"])
+        self._int_vals = np.asarray(state["int_vals"], np.int64)
+        self._int_ids = np.asarray(state["int_ids"], np.int64)
+        self._dec_ids = np.asarray(state["dec_ids"], np.int64)
+        self._dec_vals = np.asarray(state["dec_vals"], np.int64)

@@ -77,11 +77,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.engine import ops
-from repro.engine.plan import (_MAX_RETRIES, _absorb_traced, _cached_program,
-                               _Caps, _exec_rule_traced, _linear_tail,
-                               _select_state, compile_rule_plan,
-                               program_fingerprint)
+from repro.engine import ops, recovery
+from repro.engine.plan import (_absorb_traced, _cached_program, _Caps,
+                               _exec_rule_traced, _linear_tail,
+                               _select_state, CapacityError,
+                               compile_rule_plan, program_fingerprint,
+                               RetryBudget)
 from repro.engine.relation import Relation, lex_order, pad_of, pad_value
 from repro.launch.mesh import axis_size
 
@@ -845,13 +846,25 @@ def refit_shards(data, ndev, new_cap):
 # ---------------------------------------------------------------------------
 def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
                             mesh=None, axis: tuple = ("data",),
-                            cfg: DistConfig | None = None):
+                            cfg: DistConfig | None = None,
+                            spill: bool = True):
     """Sharded materialization of ``kb`` over ``mesh`` (default: every
     local device on the "data" axis).  ``cfg``, when given, floors the
     planner's per-shard store / delta / exchange-bucket capacities (callers
     that know the instance scale skip the cold-start overflow retries).
     Returns MatStats, or None when the program is outside the plannable
-    fragment (the caller falls back to the fused / two-phase executors)."""
+    fragment (the caller falls back to the fused / two-phase executors).
+
+    Capacity overflows retry under a ``RetryBudget``; an exhausted budget
+    mid-run ``spill``s the remaining rounds to the two-phase executor
+    (``spill=False`` re-raises the ``CapacityError``).
+
+    With ``REPRO_CKPT_DIR`` set, every shard's trimmed store and delta
+    rows are checkpointed at round / fixpoint-exit boundaries under one
+    coordinator manifest, and the driver restores ELASTICALLY: the
+    checkpointed rows are executor- and mesh-neutral, so a run saved at
+    one ndev resumes at any other — the restored facts simply re-partition
+    through the same full-tuple-hash canonical home the exchanges use."""
     from repro.engine.materialize import MatStats
     if mode not in ("tg", "tg_noopt"):
         return None
@@ -872,12 +885,23 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
     st = MatStats(mode=mode)
     st.extra.update(dist=True, ndev=ndev)
 
+    # restore BEFORE sharding: maybe_resume rebuilds kb.rels as global
+    # host relations, and the ShardedKB constructor below re-partitions
+    # them by tuple hash for THIS mesh — that is the whole elastic story
+    ck = recovery.EngineCheckpointer(kb, mode, "dist")
+    resume = ck.maybe_resume(st)
+
     skb = ShardedKB(kb, preds, ndev)
     fp = (program_fingerprint((plans[id(r)].key for r in program.rules),
                               sum(kb.rels[p].count for p in preds)),
           "dist", ndev)
     caps = _Caps(fp, {p: (None, skb.per_shard_max[p]) for p in preds},
                  ndev=ndev)
+    if ck.caps_state is not None and \
+            st.extra.get("resumed_from") == ("dist", ndev):
+        # capacity plans are per-shard: only a same-shape dist run's plan
+        # transfers; any other source just replans (and re-converges)
+        caps.adopt(ck.caps_state)
     if cfg is not None:
         for p in preds:
             caps.store[p] = max(caps.store[p], cfg.shard_cap)
@@ -885,7 +909,33 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
         caps._bucket_guess = max(caps._bucket_guess, cfg.bucket_cap)
     skb.pack(caps)
 
+    row_bytes = max((skb.dtype[p].itemsize * skb.arity[p] for p in preds),
+                    default=8)
+    budget = RetryBudget(caps, row_bytes=row_bytes)
+
     deltas: dict = {}    # pred -> device (ndev*delta_cap, ar), PAD-padded
+
+    def state_fn():
+        """Per-shard checkpoint payloads: each shard's trimmed store rows
+        and PAD-filtered delta rows; the base facts ride shard 0."""
+        shards = [{} for _ in range(ndev)]
+        for p in preds:
+            ar = skb.arity[p]
+            blocks = np.asarray(skb.data[p]).reshape(ndev, -1, ar)
+            for s in range(ndev):
+                shards[s][f"store__{p}"] = blocks[s, :int(skb.counts[p][s])]
+        for p, d in deltas.items():
+            ar = skb.arity[p]
+            pad = pad_value(skb.dtype[p])
+            blocks = np.asarray(d).reshape(ndev, -1, ar)
+            for s in range(ndev):
+                rows = blocks[s][blocks[s, :, 0] != pad]
+                if len(rows):
+                    rows = rows[np.lexsort(rows.T[::-1])]
+                shards[s][f"delta__{p}"] = rows
+        for p, rel in kb.base.items():
+            shards[0][f"base__{p}"] = rel.np_rows()
+        return shards
 
     def fit_delta(pred):
         data = deltas[pred]
@@ -896,7 +946,7 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
 
     def run_round(active, delta_preds, is_ext=False):
         prefilter = use_prefilter and not is_ext   # no Def. 23 in round 1
-        for _ in range(_MAX_RETRIES):
+        while True:
             sig = _dist_signature(mesh, axis, ndev, preds, caps, active,
                                   delta_preds, prefilter)
             fn, ovf_labels, derived = _cached_program(
@@ -913,6 +963,7 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
             ops.HOST_SYNC_STATS.dist_pulls += 1
             cnts, fresh, trg, ovf = pulled
             if not ovf.any():
+                budget.ok()
                 for p, d, c in zip(preds, n_stores, cnts):
                     skb.data[p] = d
                     skb.counts[p] = np.asarray(c, np.int32)
@@ -926,9 +977,8 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
             ops.HOST_SYNC_STATS.dist_retries += 1
             # a rule active at several delta positions repeats its labels;
             # dedupe so a shared capacity doubles once per retry
-            for label in {l for f, l in zip(ovf, ovf_labels) if f}:
-                caps.double(label)
-        raise RuntimeError("distributed round: capacity retries exhausted")
+            budget.overflow(dict.fromkeys(
+                l for f, l in zip(ovf, ovf_labels) if f))
 
     def fit_delta_fix(pred):
         """Delta block for the fixpoint program: the live delta refit to
@@ -984,7 +1034,6 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
             return False
         s_preds_, active = tail
         o_preds_ = tuple(p for p in preds if p not in s_preds_)
-        retries = 0
         while True:
             sig = _dist_fix_signature(mesh, axis, ndev, s_preds_, o_preds_,
                                       caps, active, use_prefilter,
@@ -1009,54 +1058,110 @@ def materialize_distributed(kb, mode: str = "tg", max_rounds: int = 10_000,
             wcnts, dcnts, rounds, trg, drv, ovf = pulled
             ops.HOST_SYNC_STATS.dist_fixpoint_iters += \
                 int(rounds) - st.rounds
+            prev_rounds = st.rounds
             st.rounds = int(rounds)
             st.triggers += int(trg)
             st.derived += int(drv)
             deltas = {p: d for p, d, c in zip(s_preds_, d_datas, dcnts)
                       if int(np.asarray(c).sum())}
             fold_tails(s_preds_, w_datas, wcnts)
+            if st.rounds > prev_rounds:
+                budget.ok()     # the loop advanced: real progress
+                progressed[0] = True
+            ck.boundary(st, state_fn, caps=caps)
             if not ovf.any():
                 return True
-            for label in {l for f, l in zip(ovf, ovf_labels) if f}:
-                # tail-full exits included: the fold above made room, but
-                # without growth a long phase would exit every
-                # tail_cap-ish rounds and pulls would scale with the fact
-                # count.  Doubling geometrically bounds tail exits at
-                # O(log facts) cold and — via the capacity memo — ONE
-                # pull per phase warm.
-                caps.double(label)
-            retries += 1
-            if retries > _MAX_RETRIES:
-                raise RuntimeError(
-                    "distributed fixpoint: capacity retries exhausted")
+            # tail-full exits included: the fold above made room, but
+            # without growth a long phase would exit every tail_cap-ish
+            # rounds and pulls would scale with the fact count.  Doubling
+            # geometrically bounds tail exits at O(log facts) cold and —
+            # via the capacity memo — ONE pull per phase warm.
+            budget.overflow(dict.fromkeys(
+                l for f, l in zip(ovf, ovf_labels) if f))
 
-    # round 1: extensional rules over B
-    ext_active = tuple((plans[id(r)], None)
-                       for r in program.extensional_rules())
-    if ext_active:
-        deltas = run_round(ext_active, (), is_ext=True)
-    st.rounds = 1
+    progressed = [resume is not None]
 
-    # fixpoint rounds: whole linear phases run inside the compiled
-    # while_loop program (one pull per phase exit); non-linear stretches
-    # fall back to host-stepped rounds (one compiled program + one scalar
-    # pull per round, psum convergence)
+    def drive():
+        nonlocal deltas
+        if resume is not None:
+            st.extra["resumed"] = True
+            for p, rows in resume.items():
+                ar = skb.arity[p]
+                tgt = (np_tuple_hash(rows)
+                       % np.uint32(ndev)).astype(np.int64)
+                parts = []
+                for d in range(ndev):
+                    part = rows[tgt == d]
+                    if len(part):
+                        part = part[np.lexsort(part.T[::-1])]
+                    parts.append(part)
+                caps.seed_delta(p, max(len(pt) for pt in parts))
+                cap = caps.delta_cap(p)
+                blk = np.full((ndev, cap, ar), pad_value(skb.dtype[p]),
+                              skb.dtype[p])
+                for d, part in enumerate(parts):
+                    blk[d, :len(part)] = part
+                deltas[p] = blk.reshape(ndev * cap, ar)
+        else:
+            # round 1: extensional rules over B
+            ext_active = tuple((plans[id(r)], None)
+                               for r in program.extensional_rules())
+            if ext_active:
+                deltas = run_round(ext_active, (), is_ext=True)
+            st.rounds = 1
+            progressed[0] = True
+            ck.boundary(st, state_fn, caps=caps)
+
+        # fixpoint rounds: whole linear phases run inside the compiled
+        # while_loop program (one pull per phase exit); non-linear
+        # stretches fall back to host-stepped rounds (one compiled program
+        # + one scalar pull per round, psum convergence)
+        fixpoint_on = ops.dist_fixpoint_enabled()
+        while deltas and st.rounds < max_rounds:
+            live = tuple(sorted(deltas))
+            if fixpoint_on and run_fixpoint(live):
+                continue
+            active = tuple((plans[id(r)], j) for r in int_rules
+                           for j, a in enumerate(r.body)
+                           if a.pred in deltas)
+            if not active:
+                break
+            deltas = run_round(active, live)
+            st.rounds += 1
+            progressed[0] = True
+            ck.boundary(st, state_fn, caps=caps)
+
     int_rules = program.intensional_rules()
     int_plans = [plans[id(r)] for r in int_rules]
-    fixpoint_on = ops.dist_fixpoint_enabled()
-    while deltas and st.rounds < max_rounds:
-        live = tuple(sorted(deltas))
-        if fixpoint_on and run_fixpoint(live):
-            continue
-        active = tuple((plans[id(r)], j) for r in int_rules
-                       for j, a in enumerate(r.body) if a.pred in deltas)
-        if not active:
-            break
-        deltas = run_round(active, live)
-        st.rounds += 1
+    try:
+        drive()
+    except CapacityError as e:
+        if not spill:
+            raise
+        if not progressed[0]:
+            return None     # cold-start overflow: plain fragment fallback
+        # graceful degradation: gather the last-good shards back into the
+        # kb and run the remaining rounds on the two-phase executor
+        from repro.engine.materialize import _fixpoint_rounds
+        skb.to_relations(kb)
+        seed = {}
+        for p, d in deltas.items():
+            ar = skb.arity[p]
+            pad = pad_value(skb.dtype[p])
+            blk = np.asarray(d).reshape(ndev, -1, ar)
+            rows = blk.reshape(-1, ar)
+            rows = rows[rows[:, 0] != pad]
+            if len(rows):
+                rows = rows[np.lexsort(rows.T[::-1])]
+            seed[p] = Relation.from_numpy(np.ascontiguousarray(rows),
+                                          sorted_by=lex_order(ar))
+        st.extra["spilled"] = str(e)
+        _fixpoint_rounds(kb, st, seed, mode, max_rounds, ck=ck)
+        return st
 
     skb.to_relations(kb)
     caps.memoize()
+    ck.final(st, state_fn, caps=caps)
     return st
 
 

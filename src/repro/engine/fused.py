@@ -38,12 +38,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.engine import ops
-from repro.engine.plan import (_MAX_RETRIES, _absorb_traced, _cached_program,
-                               _Caps, _exec_rule_traced, _linear_tail,
-                               _select_state, compile_rule_plan,
-                               program_fingerprint, RulePlan)
+from repro.engine import ops, recovery
+from repro.engine.plan import (_absorb_traced, _cached_program, _Caps,
+                               _exec_rule_traced, _linear_tail,
+                               _select_state, CapacityError,
+                               compile_rule_plan, program_fingerprint,
+                               RetryBudget, RulePlan)
 from repro.engine.relation import Relation, lex_order, pad_of
 
 __all__ = ["RulePlan", "compile_rule_plan", "materialize_fused",
@@ -257,7 +259,7 @@ def _build_fixpoint(s_preds, o_preds, caps, active, use_prefilter, pallas,
 # driver
 # ---------------------------------------------------------------------------
 def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
-                      initial_deltas=None):
+                      initial_deltas=None, spill: bool = True):
     """Fused-program materialization of ``kb``.  Returns MatStats, or None
     when the program is outside the fused fragment (the caller falls back to
     the two-phase executor).
@@ -269,7 +271,19 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
     ``repro.engine.incremental.materialize_delta``.  Seeded deltas may live
     on EDB predicates, so the loop considers every rule with a live body
     atom, not just the intensional ones (for from-scratch runs the two sets
-    coincide: deltas only ever hold derived predicates)."""
+    coincide: deltas only ever hold derived predicates).
+
+    Capacity overflows retry under a ``RetryBudget``
+    (``REPRO_MAX_RETRIES`` / ``REPRO_MAX_RESIDENT_MB``); when the budget is
+    exhausted mid-run the driver writes its last-good state back and
+    ``spill``s the remaining rounds to the two-phase executor instead of
+    doubling buffers toward OOM (``spill=False`` re-raises the
+    ``CapacityError`` — tests use it to observe the diagnostic).
+
+    With ``REPRO_CKPT_DIR`` set, the driver checkpoints at every host
+    pull boundary (post-ext round, every host-stepped round, every
+    fixpoint exit) and resumes from the newest valid checkpoint —
+    including checkpoints written by the other executors."""
     from repro.engine.materialize import MatStats
     program = kb.program
     plans = {}
@@ -286,6 +300,11 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
     st = MatStats(mode=mode)
     st.extra["fused"] = True
 
+    # delta-mode lifecycles belong to the caller: no checkpointing there
+    ck = recovery.EngineCheckpointer(kb, mode, "fused",
+                                     enabled=initial_deltas is None)
+    resume = ck.maybe_resume(st)    # replaces kb.dict / kb.rels on success
+
     # fused precondition: lexsorted, set-semantic stores
     stores, counts = {}, {}
     for p in preds:
@@ -297,18 +316,38 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
                              sum(counts.values()))
     caps = _Caps(fp, {p: (stores[p], counts[p]) for p in preds},
                  lean=initial_deltas is not None)
+    if ck.caps_state is not None:
+        caps.adopt(ck.caps_state)   # converged plan from the checkpoint
     for p in preds:
         stores[p] = ops.fit_rows(stores[p], caps.store[p])
+
+    row_bytes = max((kb.rels[p].dtype.itemsize * kb.arities[p]
+                     for p in preds), default=8)
+    budget = RetryBudget(caps, row_bytes=row_bytes)
 
     ext_plans = [plans[id(r)] for r in program.extensional_rules()]
     loop_rules = list(program.rules)
     loop_plans = [plans[id(r)] for r in loop_rules]
     deltas: dict = {}           # pred -> (data at planner delta cap, count)
+    progressed = resume is not None
+
+    def state_fn():
+        """Host-consistent checkpoint payload (single shard): trimmed
+        stores, live deltas, and the base facts."""
+        payload = {}
+        for p in preds:
+            payload[f"store__{p}"] = np.asarray(stores[p])[:counts[p]]
+        for p, (d, c) in deltas.items():
+            rows = np.asarray(d)[:int(c)]
+            payload[f"delta__{p}"] = rows[np.lexsort(rows.T[::-1])]
+        for p, rel in kb.base.items():
+            payload[f"base__{p}"] = rel.np_rows()
+        return [payload]
 
     def run_round(active, delta_preds, is_ext=False):
         nonlocal stores, counts
         prefilter = use_prefilter and not is_ext   # no Def. 23 in round 1
-        for _ in range(_MAX_RETRIES):
+        while True:
             sig = _round_signature(preds, caps, active, delta_preds,
                                    prefilter, pallas)
             fn, ovf_labels, derived = _cached_program(
@@ -323,6 +362,7 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
             ops.HOST_SYNC_STATS.fused_pulls += 1
             cnts, dcnts, trg, ovf = pulled
             if not ovf.any():
+                budget.ok()
                 stores = dict(zip(preds, n_stores))
                 counts = {p: int(c) for p, c in zip(preds, cnts)}
                 st.triggers += int(trg)
@@ -335,120 +375,159 @@ def materialize_fused(kb, mode: str = "tg", max_rounds: int = 10_000,
             ops.HOST_SYNC_STATS.fused_retries += 1
             # a rule active at several delta positions repeats its join
             # labels; dedupe so a shared capacity doubles once per retry
-            for label in {l for f, l in zip(ovf, ovf_labels) if f}:
-                caps.double(label)
+            budget.overflow(dict.fromkeys(
+                l for f, l in zip(ovf, ovf_labels) if f))
             for p in preds:
                 stores[p] = ops.fit_rows(stores[p], caps.store[p])
-        raise RuntimeError("fused round: capacity retries exhausted")
 
-    if initial_deltas is None:
-        # round 1: extensional rules over B
-        ext_active = tuple((plan, None) for plan in ext_plans)
-        if ext_active:
-            deltas = run_round(ext_active, (), is_ext=True)
-        st.rounds = 1
-    else:
-        st.extra["delta"] = True
-        for p, rel in initial_deltas.items():
-            if rel.count:
-                caps.seed_delta(p, rel.count)
-                deltas[p] = (rel.data, rel.count)
+    def drive():
+        nonlocal deltas, progressed
+        if resume is not None:
+            st.extra["resumed"] = True
+            for p, rows in resume.items():
+                caps.seed_delta(p, len(rows))
+                deltas[p] = (ops.fit_rows(rows, caps.delta_cap(p)),
+                             len(rows))
+        elif initial_deltas is None:
+            # round 1: extensional rules over B
+            ext_active = tuple((plan, None) for plan in ext_plans)
+            if ext_active:
+                deltas = run_round(ext_active, (), is_ext=True)
+            st.rounds = 1
+            progressed = True
+            ck.boundary(st, state_fn, caps=caps)
+        else:
+            st.extra["delta"] = True
+            for p, rel in initial_deltas.items():
+                if rel.count:
+                    caps.seed_delta(p, rel.count)
+                    deltas[p] = (rel.data, rel.count)
 
-    # fixpoint rounds
-    while deltas and st.rounds < max_rounds:
-        live = tuple(sorted(deltas))
-        tail = _linear_tail(loop_plans, live)
-        if tail is not None:
-            s_preds, active = tail
-            o_preds = tuple(p for p in preds if p not in s_preds)
-            w = {p: None for p in s_preds}   # sorted tails: (data, count)
-            retries = 0
-            while True:
-                sig = _fix_signature(s_preds, o_preds, caps, active,
-                                     use_prefilter, pallas, max_rounds,
-                                     donate)
-                fn, ovf_labels = _cached_program(
-                    sig, lambda: _build_fixpoint(
-                        s_preds, o_preds, caps, active, use_prefilter,
-                        pallas, max_rounds, donate))
-                out = fn(
-                    tuple(stores[p] for p in s_preds),
-                    tuple(jnp.array(ops.fit_rows(w[p][0], caps.tail_cap(p)))
-                          if w[p] else
-                          jnp.full((caps.tail_cap(p), kb.arities[p]),
-                                   kb.rels[p].pad, kb.rels[p].dtype)
-                          for p in s_preds),
-                    tuple(jnp.int32(w[p][1] if w[p] else 0)
-                          for p in s_preds),
-                    tuple(jnp.array(ops.fit_rows(deltas[p][0],
-                                                 caps.delta_cap(p)))
-                          if p in deltas else
-                          jnp.full((caps.delta_cap(p), kb.arities[p]),
-                                   kb.rels[p].pad, kb.rels[p].dtype)
-                          for p in s_preds),
-                    tuple(jnp.int32(deltas[p][1] if p in deltas else 0)
-                          for p in s_preds),
-                    tuple(stores[p] for p in o_preds),
-                    jnp.int32(st.rounds))
-                w_datas, w_counts, d_datas, d_counts, rounds, trg, drv, \
-                    ovf_vec = out
-                pulled = jax.device_get((w_counts, d_counts, rounds, trg,
-                                         drv, ovf_vec))
-                ops.HOST_SYNC_STATS.fused_pulls += 1
-                wcnts, dcnts, rounds, trg, drv, ovf = pulled
-                st.rounds = int(rounds)
-                st.triggers += int(trg)
-                st.derived += int(drv)
-                deltas = {p: (d, int(c)) for p, d, c in
-                          zip(s_preds, d_datas, dcnts) if int(c)}
-                # fold tails into the stores (exits are rare: done, a full
-                # tail, or a capacity retry)
-                ar = kb.arities
-                for p, d, c in zip(s_preds, w_datas, wcnts):
-                    w[p] = None
-                    if int(c):
-                        merged = ops.merge_union(
-                            Relation(stores[p], counts[p], lex_order(ar[p])),
-                            Relation(d, int(c), lex_order(ar[p])))
-                        counts[p] = merged.count
-                        caps.store[p] = max(caps.store[p], merged.capacity)
-                        stores[p] = ops.fit_rows(merged.data, caps.store[p])
-                if not ovf.any():
-                    deltas = {}
-                    break
-                doubled = False
-                for flag, label in zip(ovf, ovf_labels):
-                    if not flag:
-                        continue
-                    if label[0] == "tail":
-                        # tail-full exit: the fold above made room; double
-                        # only when even an empty tail cannot hold one
-                        # round's fresh rows
-                        if int(wcnts[s_preds.index(label[1])]) == 0:
-                            caps.double(label)
-                            doubled = True
-                    else:
-                        caps.double(label)
-                        doubled = True
-                if doubled:
-                    ops.HOST_SYNC_STATS.fused_retries += 1
-                    retries += 1
-                    if retries > _MAX_RETRIES:
-                        raise RuntimeError(
-                            "fused fixpoint: capacity retries exhausted")
-            break
-        active = tuple((plans[id(r)], j)
-                       for r in loop_rules
-                       for j, a in enumerate(r.body) if a.pred in deltas)
-        if not active:
-            break
-        deltas = run_round(active, live)
-        st.rounds += 1
+        # fixpoint rounds
+        while deltas and st.rounds < max_rounds:
+            live = tuple(sorted(deltas))
+            tail = _linear_tail(loop_plans, live)
+            if tail is not None:
+                s_preds, active = tail
+                o_preds = tuple(p for p in preds if p not in s_preds)
+                w = {p: None for p in s_preds}  # sorted tails (data, count)
+                while True:
+                    sig = _fix_signature(s_preds, o_preds, caps, active,
+                                         use_prefilter, pallas, max_rounds,
+                                         donate)
+                    fn, ovf_labels = _cached_program(
+                        sig, lambda: _build_fixpoint(
+                            s_preds, o_preds, caps, active, use_prefilter,
+                            pallas, max_rounds, donate))
+                    out = fn(
+                        tuple(stores[p] for p in s_preds),
+                        tuple(jnp.array(ops.fit_rows(w[p][0],
+                                                     caps.tail_cap(p)))
+                              if w[p] else
+                              jnp.full((caps.tail_cap(p), kb.arities[p]),
+                                       kb.rels[p].pad, kb.rels[p].dtype)
+                              for p in s_preds),
+                        tuple(jnp.int32(w[p][1] if w[p] else 0)
+                              for p in s_preds),
+                        tuple(jnp.array(ops.fit_rows(deltas[p][0],
+                                                     caps.delta_cap(p)))
+                              if p in deltas else
+                              jnp.full((caps.delta_cap(p), kb.arities[p]),
+                                       kb.rels[p].pad, kb.rels[p].dtype)
+                              for p in s_preds),
+                        tuple(jnp.int32(deltas[p][1] if p in deltas else 0)
+                              for p in s_preds),
+                        tuple(stores[p] for p in o_preds),
+                        jnp.int32(st.rounds))
+                    w_datas, w_counts, d_datas, d_counts, rounds, trg, \
+                        drv, ovf_vec = out
+                    pulled = jax.device_get((w_counts, d_counts, rounds,
+                                             trg, drv, ovf_vec))
+                    ops.HOST_SYNC_STATS.fused_pulls += 1
+                    wcnts, dcnts, rounds, trg, drv, ovf = pulled
+                    prev_rounds = st.rounds
+                    st.rounds = int(rounds)
+                    st.triggers += int(trg)
+                    st.derived += int(drv)
+                    deltas = {p: (d, int(c)) for p, d, c in
+                              zip(s_preds, d_datas, dcnts) if int(c)}
+                    # fold tails into the stores (exits are rare: done, a
+                    # full tail, or a capacity retry)
+                    ar = kb.arities
+                    for p, d, c in zip(s_preds, w_datas, wcnts):
+                        w[p] = None
+                        if int(c):
+                            merged = ops.merge_union(
+                                Relation(stores[p], counts[p],
+                                         lex_order(ar[p])),
+                                Relation(d, int(c), lex_order(ar[p])))
+                            counts[p] = merged.count
+                            caps.store[p] = max(caps.store[p],
+                                                merged.capacity)
+                            stores[p] = ops.fit_rows(merged.data,
+                                                     caps.store[p])
+                    if st.rounds > prev_rounds:
+                        budget.ok()     # the loop advanced: real progress
+                        progressed = True
+                    ck.boundary(st, state_fn, caps=caps)
+                    if not ovf.any():
+                        deltas = {}
+                        break
+                    to_double = []
+                    for flag, label in zip(ovf, ovf_labels):
+                        if not flag:
+                            continue
+                        if label[0] == "tail" and \
+                                int(wcnts[s_preds.index(label[1])]) != 0:
+                            # tail-full exit: the fold above made room;
+                            # double only when even an empty tail cannot
+                            # hold one round's fresh rows
+                            continue
+                        to_double.append(label)
+                    if to_double:
+                        ops.HOST_SYNC_STATS.fused_retries += 1
+                        budget.overflow(dict.fromkeys(to_double))
+                break
+            active = tuple((plans[id(r)], j)
+                           for r in loop_rules
+                           for j, a in enumerate(r.body)
+                           if a.pred in deltas)
+            if not active:
+                break
+            deltas = run_round(active, live)
+            st.rounds += 1
+            progressed = True
+            ck.boundary(st, state_fn, caps=caps)
+
+    try:
+        drive()
+    except CapacityError as e:
+        if not spill:
+            raise
+        if not progressed:
+            return None     # cold-start overflow: plain fragment fallback
+        # graceful degradation: write the last-good state back and run the
+        # remaining rounds on the two-phase executor, whose buffers grow
+        # incrementally instead of by whole-plan doubling
+        from repro.engine.materialize import _fixpoint_rounds
+        for p in preds:
+            kb.rels[p] = Relation(stores[p], counts[p],
+                                  lex_order(kb.rels[p].arity))
+        seed = {}
+        for p, (d, c) in deltas.items():
+            rows = np.asarray(d)[:int(c)]
+            seed[p] = Relation.from_numpy(
+                rows[np.lexsort(rows.T[::-1])],
+                sorted_by=lex_order(kb.arities[p]))
+        st.extra["spilled"] = str(e)
+        _fixpoint_rounds(kb, st, seed, mode, max_rounds, ck=ck)
+        return st
 
     for p in preds:
         kb.rels[p] = Relation(stores[p], counts[p],
                               lex_order(kb.rels[p].arity))
     caps.memoize()
+    ck.final(st, state_fn, caps=caps)
     return st
 
 

@@ -146,9 +146,18 @@ def _propagate(kb, seeds: Dict[str, Relation], st: MatStats, mode: str,
             break
         if fused_ok and rounds >= _FUSED_HANDOFF:
             from repro.engine.fused import materialize_fused
-            fst = materialize_fused(kb, mode=mode,
-                                    max_rounds=max_rounds - rounds,
-                                    initial_deltas=deltas)
+            from repro.engine.plan import CapacityError
+            try:
+                fst = materialize_fused(kb, mode=mode,
+                                        max_rounds=max_rounds - rounds,
+                                        initial_deltas=deltas,
+                                        spill=False)
+            except CapacityError as e:
+                # retry budget exhausted before the handoff made progress:
+                # stay on the two-phase loop, whose buffers track the
+                # actual delta size instead of doubling whole round plans
+                st.extra["spilled"] = str(e)
+                fst = None
             if fst is not None:
                 st.rounds += fst.rounds
                 st.triggers += fst.triggers

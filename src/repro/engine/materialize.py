@@ -39,9 +39,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.terms import Atom, Program, Rule, Var, is_var
-from repro.engine import ops
+from repro.engine import ops, recovery
 from repro.engine.dictionary import Dictionary
-from repro.engine.relation import Relation
+from repro.engine.relation import Relation, lex_order
 
 
 # ---------------------------------------------------------------------------
@@ -101,28 +101,45 @@ class EngineKB:
         antijoin against what the store already holds, and merge the fresh
         rows in with the incremental sorted merge.  Chunked callers never
         hold more than one decoded chunk in memory — the store only ever
-        grows by sorted merges."""
+        grows by sorted merges.
+
+        Each chunk is ATOMIC: the merged store is staged while the old
+        relation stays referenced, and the dictionary's interning growth is
+        marked first and rolled back if anything in the chunk fails to
+        encode or merge — a malformed chunk raises and leaves both the
+        dictionary and the store exactly as they were."""
         rows = np.asarray(rows) if not isinstance(rows, np.ndarray) else rows
         if rows.ndim == 1:
             rows = rows.reshape(-1, 1)
-        enc = self.dict.encode_columns(rows)
-        n, ar = enc.shape
+        known = self.arities.get(pred)
+        if known is not None and len(rows) and rows.shape[1] != known:
+            raise ValueError(
+                f"ingest chunk for {pred!r} has arity {rows.shape[1]}, "
+                f"store expects {known}")
+        token = self.dict.mark()
+        try:
+            enc = self.dict.encode_columns(rows)
+            n, ar = enc.shape
+            store = self.rels.get(pred)
+            if store is None:
+                store = Relation.empty(max(ar, 1),
+                                       dtype=self.dict.id_dtype)
+            staged = store
+            if n:
+                rel = ops.dedup(Relation.from_numpy(enc))
+                if store.count == 0:
+                    staged = rel
+                else:
+                    fresh = ops.antijoin(rel, store)
+                    if fresh.count:
+                        staged = ops.merge_union(store, fresh)
+        except Exception:
+            self.dict.rollback(token)
+            raise
+        # commit point: dictionary growth and the store swap land together
         self.arities.setdefault(pred, ar)
-        if pred not in self.rels:
-            self.rels[pred] = Relation.empty(max(ar, 1),
-                                             dtype=self.dict.id_dtype)
-        if n == 0:
-            self.base[pred] = self.rels[pred]
-            return
-        rel = ops.dedup(Relation.from_numpy(enc))
-        store = self.rels[pred]
-        if store.count == 0:
-            self.rels[pred] = rel
-        else:
-            fresh = ops.antijoin(rel, store)
-            if fresh.count:
-                self.rels[pred] = ops.merge_union(store, fresh)
-        self.base[pred] = self.rels[pred]
+        self.rels[pred] = staged
+        self.base[pred] = staged
 
     @classmethod
     def from_stream(cls, program: Program, chunks, dtype=None) -> "EngineKB":
@@ -336,60 +353,114 @@ def materialize(kb: EngineKB, mode: str = "tg", max_rounds: int = 10_000,
     program = kb.program
     deltas: Dict[str, Relation] = {}
 
-    def absorb(pred, rel, collector):
-        """Dedup + antijoin vs store, merge-append, record delta.
+    ck = recovery.EngineCheckpointer(kb, mode, "two-phase")
+    resume = ck.maybe_resume(st)
+    if resume is not None:
+        st.extra["resumed"] = True
+        for p, rows in resume.items():
+            deltas[p] = Relation.from_numpy(
+                rows, sorted_by=lex_order(rows.shape[1]),
+                dtype=kb.dict.id_dtype)
+    else:
+        # round 1: extensional rules over B
+        derived_round = defaultdict(list)
+        for rule in program.extensional_rules():
+            inputs = [kb.rels[a.pred] for a in rule.body]
+            head, trg = execute_rule(kb, rule, inputs)
+            st.triggers += trg
+            if per_rule:
+                _absorb(kb, st, rule.head.pred, head, deltas)
+            elif head.count:
+                derived_round[rule.head.pred].append(head)
+        st.rounds = 1
+        if not per_rule:
+            for pred, rels in derived_round.items():
+                acc = None
+                for r in rels:
+                    acc = r if acc is None else ops.union(acc, r,
+                                                          dedupe=False)
+                _absorb(kb, st, pred, acc, deltas)
+        ck.boundary(st, lambda: _host_state(kb, deltas))
 
-        With the sorted store the delta comes out of ``dedup`` lexsorted, the
-        antijoin probes the already-sorted store (no sort pass), and the
-        surviving rows — disjoint from the store by construction — are folded
-        in with an incremental merge instead of concat + resort."""
-        if rel is None or rel.count == 0:
-            return
-        rel = ops.dedup(rel)
-        fresh = ops.antijoin(rel, kb.rels[pred])
-        if fresh.count == 0:
-            return
+    _fixpoint_rounds(kb, st, deltas, mode, max_rounds,
+                     per_rule=per_rule, ck=ck)
+    return st
+
+
+def _absorb(kb, st, pred, rel, collector):
+    """Dedup + antijoin vs store, merge-append, record delta.
+
+    With the sorted store the delta comes out of ``dedup`` lexsorted, the
+    antijoin probes the already-sorted store (no sort pass), and the
+    surviving rows — disjoint from the store by construction — are folded
+    in with an incremental merge instead of concat + resort."""
+    if rel is None or rel.count == 0:
+        return
+    rel = ops.dedup(rel)
+    fresh = ops.antijoin(rel, kb.rels[pred])
+    if fresh.count == 0:
+        return
+    if ops.sorted_store_enabled():
+        kb.rels[pred] = ops.merge_union(kb.rels[pred], fresh)
+    else:
+        kb.rels[pred] = ops.union(kb.rels[pred], fresh, dedupe=False)
+    st.derived += fresh.count
+    if pred in collector:
+        # prior deltas for pred are already in the store, so ``fresh`` is
+        # disjoint from them too and the merge path applies
         if ops.sorted_store_enabled():
-            kb.rels[pred] = ops.merge_union(kb.rels[pred], fresh)
+            collector[pred] = ops.merge_union(collector[pred], fresh)
         else:
-            kb.rels[pred] = ops.union(kb.rels[pred], fresh, dedupe=False)
-        st.derived += fresh.count
-        if pred in collector:
-            # prior deltas for pred are already in the store, so ``fresh`` is
-            # disjoint from them too and the merge path applies
-            if ops.sorted_store_enabled():
-                collector[pred] = ops.merge_union(collector[pred], fresh)
-            else:
-                collector[pred] = ops.union(collector[pred], fresh,
-                                            dedupe=True)
-        else:
-            collector[pred] = fresh
+            collector[pred] = ops.union(collector[pred], fresh,
+                                        dedupe=True)
+    else:
+        collector[pred] = fresh
 
-    # round 1: extensional rules over B
-    derived_round = defaultdict(list)
-    for rule in program.extensional_rules():
-        inputs = [kb.rels[a.pred] for a in rule.body]
-        head, trg = execute_rule(kb, rule, inputs)
-        st.triggers += trg
-        if per_rule:
-            absorb(rule.head.pred, head, deltas)
-        elif head.count:
-            derived_round[rule.head.pred].append(head)
-    st.rounds = 1
-    if not per_rule:
-        for pred, rels in derived_round.items():
-            acc = None
-            for r in rels:
-                acc = r if acc is None else ops.union(acc, r, dedupe=False)
-            absorb(pred, acc, deltas)
 
-    # fixpoint rounds over intensional rules
-    for k in range(2, max_rounds + 1):
-        if not deltas:
-            break
+def _host_state(kb, deltas):
+    """Single-shard checkpoint payload for the two-phase executor: trimmed
+    lexsorted host rows for every store / live delta / base relation."""
+    def rows_of(rel):
+        rows = np.asarray(rel.np_rows())
+        if len(rows) and not rel.is_lexsorted:
+            rows = rows[np.lexsort(rows.T[::-1])]
+        return rows
+    payload = {}
+    for p, rel in kb.rels.items():
+        payload[f"store__{p}"] = rows_of(rel)
+    for p, rel in deltas.items():
+        if rel.count:
+            payload[f"delta__{p}"] = rows_of(rel)
+    for p, rel in kb.base.items():
+        payload[f"base__{p}"] = rows_of(rel)
+    return [payload]
+
+
+def _fixpoint_rounds(kb, st, deltas, mode, max_rounds,
+                     per_rule: bool = False, ck=None):
+    """Semi-naive fixpoint rounds of the two-phase executor, continuing
+    from ``st.rounds`` with the given live ``deltas`` (pred -> Relation).
+
+    Shared by three callers: ``materialize()``'s two-phase path after its
+    round 1, a checkpoint resume (seeded with the restored deltas), and
+    the fused / distributed drivers' CapacityError SPILL — their last-good
+    stores are already in ``kb.rels``, so finishing here degrades
+    throughput but never correctness.  With ``ck`` set, each committed
+    round is a checkpoint boundary."""
+    program = kb.program
+    int_rules = list(program.intensional_rules())
+    ext_rules = list(program.extensional_rules())
+
+    while deltas and st.rounds < max_rounds:
         derived_round = defaultdict(list)
         new_deltas: Dict[str, Relation] = {}
-        for rule in program.intensional_rules():
+        # spilled / incremental seeds may sit on EDB predicates, so
+        # extensional rules with a live body atom join the round (for a
+        # from-scratch run deltas only ever hold derived predicates and
+        # this set is empty — the loop is then the classic SNE round)
+        live_ext = [r for r in ext_rules
+                    if any(a.pred in deltas for a in r.body)]
+        for rule in int_rules + live_ext:
             prefilter = (kb.rels.get(rule.head.pred)
                          if mode == "tg" else None)
             for j, atom in enumerate(rule.body):
@@ -403,17 +474,22 @@ def materialize(kb: EngineKB, mode: str = "tg", max_rounds: int = 10_000,
                                          prefilter=prefilter)
                 st.triggers += trg
                 if per_rule:
-                    absorb(rule.head.pred, head, new_deltas)
+                    _absorb(kb, st, rule.head.pred, head, new_deltas)
                 elif head.count:
                     derived_round[rule.head.pred].append(head)
-        st.rounds = k
+        st.rounds += 1
         if not per_rule:
             for pred, rels in derived_round.items():
                 acc = None
                 for r in rels:
-                    acc = r if acc is None else ops.union(acc, r, dedupe=False)
-                absorb(pred, acc, new_deltas)
+                    acc = r if acc is None else ops.union(acc, r,
+                                                          dedupe=False)
+                _absorb(kb, st, pred, acc, new_deltas)
         deltas = new_deltas
+        if ck is not None:
+            ck.boundary(st, lambda: _host_state(kb, deltas))
+    if ck is not None:
+        ck.final(st, lambda: _host_state(kb, deltas))
     return st
 
 

@@ -60,7 +60,7 @@ Env-flag matrix
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import lru_cache
 
 import jax
@@ -173,6 +173,12 @@ class HostSyncStats:
         self.count_pulls = self.fused_pulls = self.fused_retries = 0
         self.dist_pulls = self.dist_retries = 0
         self.dist_fixpoint_pulls = self.dist_fixpoint_iters = 0
+
+    def snapshot(self) -> "HostSyncStats":
+        """Immutable copy of the current counters — callers comparing
+        before/after an operation (e.g. the mid-run-restore invariant
+        tests) hold a snapshot instead of racing the live singleton."""
+        return replace(self)
 
     def total(self) -> int:
         return self.count_pulls + self.fused_pulls + self.dist_pulls

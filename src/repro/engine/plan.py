@@ -51,14 +51,115 @@ fixpoint never restarts).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.terms import is_var
-from repro.engine import ops
+from repro.engine import faultinject, ops
 from repro.engine.relation import next_pow2, pad_of
 
-_MAX_RETRIES = 40
+
+def max_retries() -> int:
+    """Attempt ceiling of one overflow double-and-retry ladder
+    (``REPRO_MAX_RETRIES``): consecutive zero-progress retries past this
+    raise :class:`CapacityError` instead of doubling toward OOM."""
+    return int(os.environ.get("REPRO_MAX_RETRIES", "8"))
+
+
+def max_resident_bytes() -> int:
+    """Resident-footprint ceiling for the planner's padded buffers
+    (``REPRO_MAX_RESIDENT_MB``, default 8192): doubling past it raises
+    :class:`CapacityError` — the executor degrades to the two-phase
+    spill path instead of asking XLA for buffers that cannot fit."""
+    return int(os.environ.get("REPRO_MAX_RESIDENT_MB", "8192")) << 20
+
+
+class CapacityError(RuntimeError):
+    """A capacity ladder ran out of budget.  Names the bucket label being
+    grown and the bytes the next plan would have resided at, so the
+    operator (or the spill path) knows which buffer diverged."""
+
+    def __init__(self, label, requested_bytes: int, attempts: int,
+                 reason: str):
+        self.label = label
+        self.requested_bytes = int(requested_bytes)
+        self.attempts = attempts
+        self.reason = reason
+        super().__init__(
+            f"capacity bucket {label!r} exhausted its retry budget after "
+            f"{attempts} attempts ({reason}); the plan would reside at "
+            f"~{self.requested_bytes >> 20} MiB "
+            f"({self.requested_bytes} bytes). Raise REPRO_MAX_RETRIES / "
+            "REPRO_MAX_RESIDENT_MB, or let the driver spill to the "
+            "two-phase executor.")
+
+
+class RetryBudget:
+    """Bounded replacement for the unbounded double-and-retry loops.
+
+    One budget guards one driver invocation.  ``overflow(labels)`` records
+    a failed attempt and grows exactly the overflowed capacities; ``ok()``
+    marks progress (a committed round / a fixpoint exit that advanced) and
+    resets the attempt ladder.  Growth escalates: the first two consecutive
+    overflows of a label double it once each (the legacy trajectory, so
+    warm capacity plans and their memoized sizes are unchanged), then
+    ramps to at most four doublings (x16) per attempt — a buffer that
+    keeps overflowing reaches any realizable size within the default 8
+    attempts instead of creeping one doubling at a time, while the final
+    jump overshoots the converged plan by a bounded factor instead of
+    squaring past it.
+
+    Two ceilings end the ladder with a diagnostic :class:`CapacityError`:
+    ``REPRO_MAX_RETRIES`` consecutive zero-progress attempts, or a planned
+    resident footprint past ``REPRO_MAX_RESIDENT_MB``."""
+
+    def __init__(self, caps: "_Caps", row_bytes: int = 8,
+                 attempts: int | None = None,
+                 resident_bytes: int | None = None):
+        self.caps = caps
+        self.row_bytes = max(int(row_bytes), 1)
+        self.max_attempts = max_retries() if attempts is None else attempts
+        self.max_bytes = (max_resident_bytes() if resident_bytes is None
+                          else resident_bytes)
+        self._attempts = 0
+        self._streak: dict = {}
+
+    def ok(self) -> None:
+        self._attempts = 0
+        self._streak.clear()
+
+    def resident_bytes(self) -> int:
+        return self.caps.planned_rows() * self.row_bytes
+
+    def overflow(self, labels) -> None:
+        """Record one failed attempt; double every overflowed label (with
+        escalation); raise :class:`CapacityError` when the budget is
+        spent."""
+        labels = list(labels)
+        self._attempts += 1
+        worst = labels[0] if labels else ("unknown", "?")
+        if self._attempts > self.max_attempts:
+            raise CapacityError(worst, self.resident_bytes(),
+                                self._attempts - 1,
+                                f"REPRO_MAX_RETRIES={self.max_attempts} "
+                                "zero-progress retries")
+        stale = set(self._streak) - set(labels)
+        for label in stale:
+            del self._streak[label]
+        for label in labels:
+            streak = self._streak.get(label, 0) + 1
+            self._streak[label] = streak
+            doubles = 1 if streak <= 2 else min(1 << (streak - 2), 4)
+            for _ in range(doubles):
+                self.caps.double(label)
+        resident = self.resident_bytes()
+        if resident > self.max_bytes:
+            raise CapacityError(worst, resident, self._attempts,
+                                "planned buffers exceed "
+                                "REPRO_MAX_RESIDENT_MB")
+
 
 # successful planner capacities keyed by (program fingerprint, kind, name) —
 # reused across EngineKB instances so a warmed-up program never re-learns
@@ -315,7 +416,10 @@ class _Caps:
         dominate either guess."""
         self.fp = fp
         base = max([c for _, c in stores.values()] + [1])
-        if lean:
+        if lean or faultinject.get_faults().tiny_caps():
+            # forced-overflow storm (REPRO_FAULT_SPEC=storm): start the
+            # delta-family guesses at the floor so every cold phase pays
+            # the full double-and-retry ladder
             base = 1
         self.store = {}
         self.delta = {}
@@ -392,6 +496,27 @@ class _Caps:
         return (sum(self.store.values()) + sum(self.delta.values())
                 + sum(self.tail.values()) + sum(self.join.values())
                 + sum(self.bucket.values()))
+
+    def state(self) -> dict:
+        """Checkpointable snapshot of every converged capacity (plain
+        dicts of pow-2 sizes keyed by the planner's own label names)."""
+        return {"store": dict(self.store), "delta": dict(self.delta),
+                "tail": dict(self.tail), "join": dict(self.join),
+                "bucket": dict(self.bucket)}
+
+    def adopt(self, state: dict | None) -> None:
+        """Overlay a checkpointed capacity plan: every saved size floors
+        the current one (sizes only grow, so a resumed run plans at least
+        as large as the crashed run had converged to and re-pays no
+        overflow ladder).  Keys are the planner's own label names — plan
+        keys are deterministic for a given program + dictionary prefix,
+        so they round-trip through pickle across processes."""
+        if not state:
+            return
+        for kind in ("store", "delta", "tail", "join", "bucket"):
+            mine = getattr(self, kind)
+            for name, cap in state.get(kind, {}).items():
+                mine[name] = max(mine.get(name, 0), int(cap))
 
     def memoize(self):
         while len(_CAP_MEMO) >= _CAP_MEMO_LIMIT:

@@ -20,10 +20,16 @@ from typing import Optional
 
 class PreemptionGuard:
     """Installs SIGTERM/SIGINT handlers that set a flag the train loop polls
-    at step boundaries (never mid-collective)."""
+    at step boundaries (never mid-collective).
 
-    def __init__(self, signals=(signal.SIGTERM,)):
+    ``chain=True`` keeps any previously-installed Python handler live: the
+    guard sets its flag and then forwards the signal, so a library-level
+    guard (e.g. the engine checkpointer's) composes with an application's
+    own handler instead of silently replacing it."""
+
+    def __init__(self, signals=(signal.SIGTERM,), chain: bool = False):
         self.requested = False
+        self.chain = chain
         self._prev = {}
         for s in signals:
             try:
@@ -33,6 +39,10 @@ class PreemptionGuard:
 
     def _handler(self, signum, frame):
         self.requested = True
+        if self.chain:
+            prev = self._prev.get(signum)
+            if callable(prev):
+                prev(signum, frame)
 
     def restore(self):
         for s, h in self._prev.items():

@@ -170,3 +170,40 @@ def test_dist_store_invariant(monkeypatch):
         order = np.lexsort(rows.T[::-1])
         assert (order == np.arange(len(rows))).all(), pred
         assert len(rel.rows_set()) == rel.count, pred
+
+
+def test_dist_midrun_restore_keeps_pulls_invariant(tmp_path, monkeypatch):
+    """Kill-free rehearsal of crash recovery on the local mesh: run with
+    checkpointing, rewind the checkpoint store to a mid-run tag, resume
+    from a fresh KB — exact closure parity AND the per-round host-pull
+    accounting (offset by the resumed rounds) must both survive."""
+    from repro.engine import recovery
+    monkeypatch.delenv("REPRO_DIST", raising=False)
+    monkeypatch.delenv("REPRO_FAULT_SPEC", raising=False)
+    monkeypatch.setenv("REPRO_CKPT_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_CKPT_KEEP", "100")
+    TC = parse_program("e(X, Y) -> T(X, Y)\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    B = [parse_atom(f"e(v{i}, v{i+1})") for i in range(24)] + \
+        [parse_atom("e(v17, v3)")]
+    kb1 = EngineKB(TC, B)
+    st1 = materialize(kb1, mode="tg", backend="dist")
+    assert st1.extra.get("dist") is True
+    assert st1.extra.get("checkpoints", 0) >= 2
+
+    mgr = recovery.RecoveryManager(str(tmp_path), keep=100)
+    tags = mgr.tags()
+    mid = tags[len(tags) // 2]
+    assert 0 < mid < st1.rounds
+    for t in tags:
+        if t > mid:
+            mgr.drop(t)
+
+    ops.HOST_SYNC_STATS.reset()
+    kb2 = EngineKB(TC, B)
+    st2 = materialize(kb2, mode="tg", backend="dist")
+    assert st2.extra.get("resumed_rounds") == mid
+    assert st2.rounds == st1.rounds
+    assert kb2.decode_facts() == kb1.decode_facts()
+    s = ops.HOST_SYNC_STATS.snapshot()
+    assert s.dist_pulls == (st2.rounds - mid - s.dist_fixpoint_iters) \
+        + s.dist_retries + s.dist_fixpoint_pulls

@@ -1,0 +1,587 @@
+"""Fault tolerance: durable checkpoint store (atomicity, checksums,
+fallback), deterministic fault injection, bounded retry budgets with
+graceful spill, atomic streamed ingest, and full kill-9 / SIGTERM
+crash-resume parity.  Crash cases run in subprocesses (the fault really
+kills the process); everything else is in-process."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.terms import parse_atom, parse_program
+from repro.engine import faultinject, ops, plan, recovery
+from repro.engine.fused import materialize_fused
+from repro.engine.materialize import EngineKB, materialize
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+TC = parse_program("""
+    e(X, Y) -> T(X, Y)
+    T(X, Y) & e(Y, Z) -> T(X, Z)
+""")
+
+
+def _chain(n, extra=0, seed=0):
+    rng = np.random.default_rng(seed)
+    edges = [(i, i + 1) for i in range(n)]
+    edges += [tuple(e) for e in rng.integers(0, n, (extra, 2))]
+    return [parse_atom(f"e(v{a}, v{b})") for a, b in edges]
+
+
+def _payload(i):
+    return [{"store__e": (np.arange(6, dtype=np.int32) + i).reshape(3, 2)}]
+
+
+# ---------------------------------------------------------------------------
+# RecoveryManager: atomic save, checksum validation, fallback, GC
+# ---------------------------------------------------------------------------
+def test_manager_save_load_roundtrip(tmp_path):
+    mgr = recovery.RecoveryManager(str(tmp_path), keep=10)
+    mgr.save(1, {"fingerprint": "fp", "rounds": 1}, _payload(1),
+             {"dict.pkl": b"one"})
+    mgr.save(2, {"fingerprint": "fp", "rounds": 2}, _payload(2),
+             {"dict.pkl": b"two"})
+    assert mgr.tags() == [1, 2]
+    meta, shards, blobs = mgr.load("fp")
+    assert meta["rounds"] == 2
+    np.testing.assert_array_equal(
+        shards[0]["store__e"], (np.arange(6, dtype=np.int32) + 2).reshape(3, 2))
+    assert blobs["dict.pkl"] == b"two"
+    # fingerprint mismatch: a different program's checkpoints never restore
+    assert mgr.load("other-fp") is None
+
+
+def test_manager_corrupt_payload_falls_back(tmp_path):
+    mgr = recovery.RecoveryManager(str(tmp_path), keep=10)
+    mgr.save(1, {"fingerprint": "fp", "rounds": 1}, _payload(1), {})
+    mgr.save(2, {"fingerprint": "fp", "rounds": 2}, _payload(2), {})
+    faultinject.corrupt_file(os.path.join(mgr._path(2), "shard_0.npz"))
+    meta, _, _ = mgr.load("fp")
+    assert meta["rounds"] == 1        # checksum catches the flip, falls back
+    faultinject.corrupt_file(os.path.join(mgr._path(1), "shard_0.npz"))
+    assert mgr.load("fp") is None     # nothing valid left
+
+
+def test_manager_corrupt_manifest_skipped(tmp_path):
+    mgr = recovery.RecoveryManager(str(tmp_path), keep=10)
+    mgr.save(1, {"fingerprint": "fp", "rounds": 1}, _payload(1), {})
+    mgr.save(2, {"fingerprint": "fp", "rounds": 2}, _payload(2), {})
+    with open(os.path.join(mgr._path(2), "MANIFEST.json"), "w") as f:
+        f.write("{ not json")
+    meta, _, _ = mgr.load("fp")
+    assert meta["rounds"] == 1
+
+
+def test_manager_gc_and_tmp_litter(tmp_path):
+    mgr = recovery.RecoveryManager(str(tmp_path), keep=2)
+    for t in range(1, 5):
+        mgr.save(t, {"fingerprint": "fp", "rounds": t}, _payload(t), {})
+    assert mgr.tags() == [3, 4]       # GC kept the newest `keep`
+    # a crashed save leaves a .tmp dir and a manifest-less dir: both ignored
+    os.makedirs(tmp_path / ".tmp_ckpt_00000009")
+    os.makedirs(tmp_path / "ckpt_00000010")
+    assert mgr.tags() == [3, 4]
+    meta, _, _ = mgr.load("fp")
+    assert meta["rounds"] == 4
+
+
+# ---------------------------------------------------------------------------
+# fault injection primitives
+# ---------------------------------------------------------------------------
+def test_faultspec_parsing():
+    fs = faultinject.FaultSpec("crash:round=7,sleep:round=2:secs=0.5,storm")
+    assert fs.active and fs.tiny_caps()
+    assert fs._round_of("crash") == 7
+    assert fs.events["sleep"] == {"round": "2", "secs": "0.5"}
+    empty = faultinject.FaultSpec("")
+    assert not empty.active and not empty.tiny_caps()
+    empty.on_boundary(10)             # all hooks are no-ops when empty
+
+
+def test_corrupt_file_flips_one_byte(tmp_path):
+    p = tmp_path / "blob"
+    p.write_bytes(b"abcdefgh")
+    faultinject.corrupt_file(str(p), seed=3)
+    got = p.read_bytes()
+    assert len(got) == 8 and sum(a != b for a, b in zip(got, b"abcdefgh")) == 1
+    empty = tmp_path / "empty"
+    empty.write_bytes(b"")
+    faultinject.corrupt_file(str(empty))
+    assert empty.read_bytes() == b"\xff"
+
+
+def test_ckpt_corrupt_event_one_shot(tmp_path):
+    mgr = recovery.RecoveryManager(str(tmp_path), keep=10)
+    for t in (1, 2, 3):
+        mgr.save(t, {"fingerprint": "fp", "rounds": t}, _payload(t), {})
+    spec = faultinject.FaultSpec("ckpt_corrupt:tag=2")
+    spec.on_checkpoint(mgr._path(1), 1)   # below the tag threshold: no-op
+    assert mgr._load_one(1, "fp") is not None
+    spec.on_checkpoint(mgr._path(2), 2)   # fires exactly here
+    assert mgr._load_one(2, "fp") is None
+    spec.on_checkpoint(mgr._path(3), 3)   # one-shot: tag 3 stays intact
+    assert mgr._load_one(3, "fp") is not None
+    mgr.drop(3)
+    meta, _, _ = mgr.load("fp")           # skips the corrupt tag 2
+    assert meta["rounds"] == 1
+
+
+def test_preemption_guard_chains_previous_handler():
+    seen = []
+    prev = signal.signal(signal.SIGUSR1, lambda s, f: seen.append(s))
+    try:
+        from repro.train.fault import PreemptionGuard
+        g = PreemptionGuard(signals=(signal.SIGUSR1,), chain=True)
+        os.kill(os.getpid(), signal.SIGUSR1)
+        time.sleep(0.01)
+        assert g.requested
+        assert seen == [signal.SIGUSR1]   # chained to the outer handler
+        g.restore()
+    finally:
+        signal.signal(signal.SIGUSR1, prev)
+
+
+def test_kb_fingerprint_identity():
+    kb = EngineKB(TC, _chain(4))
+    assert recovery.kb_fingerprint(kb, "tg") == \
+        recovery.kb_fingerprint(EngineKB(TC, _chain(8)), "tg")
+    assert recovery.kb_fingerprint(kb, "tg") != \
+        recovery.kb_fingerprint(kb, "tg_noopt")
+
+
+# ---------------------------------------------------------------------------
+# dictionary rollback + atomic streamed ingest
+# ---------------------------------------------------------------------------
+def test_dictionary_mark_rollback():
+    from repro.engine.dictionary import Dictionary
+    d = Dictionary()
+    base = d.encode_many(["a", "b", "c"])
+    token = d.mark()
+    d.encode_many(["x", "y"])
+    assert len(d) == 5
+    d.rollback(token)
+    assert len(d) == 3
+    assert [d.decode(i) for i in base] == ["a", "b", "c"]
+    # re-interning after rollback hands out fresh consistent ids
+    again = d.encode_many(["x", "a"])
+    assert d.decode(again[0]) == "x" and d.decode(again[1]) == "a"
+
+
+def test_dictionary_state_roundtrip():
+    from repro.engine.dictionary import Dictionary
+    d = Dictionary()
+    ids = d.encode_many(["a", "b", 42])
+    d2 = Dictionary()
+    d2.load_state(d.state_dict())
+    assert len(d2) == len(d)
+    assert [d2.decode(i) for i in ids] == ["a", "b", 42]
+
+
+def test_ingest_rejects_bad_arity_chunk_atomically():
+    prog = parse_program("e(X, Y) -> T(X, Y)")
+    kb = EngineKB(prog, ())
+    kb.ingest_rows("e", np.array([["a", "b"], ["b", "c"]], dtype=object))
+    n_terms, n_rows = len(kb.dict), kb.rels["e"].count
+    with pytest.raises(ValueError, match="arity"):
+        kb.ingest_rows("e", np.array([["x", "y", "z"]], dtype=object))
+    assert len(kb.dict) == n_terms and kb.rels["e"].count == n_rows
+
+
+def test_ingest_failed_chunk_rolls_back_then_retries(monkeypatch):
+    prog = parse_program("e(X, Y) -> T(X, Y)")
+    chunk1 = np.array([["a", "b"], ["b", "c"]], dtype=object)
+    chunk2 = np.array([["b", "c"], ["c", "d"], ["d", "e"]], dtype=object)
+    kb = EngineKB(prog, ())
+    kb.ingest_rows("e", chunk1)
+    n_terms, store = len(kb.dict), kb.rels["e"]
+
+    orig = ops.merge_union
+    calls = {"n": 0}
+
+    def flaky_merge(a, b):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("simulated mid-chunk failure")
+        return orig(a, b)
+
+    monkeypatch.setattr(ops, "merge_union", flaky_merge)
+    with pytest.raises(RuntimeError, match="mid-chunk"):
+        kb.ingest_rows("e", chunk2)
+    # the failed chunk left no trace: dictionary AND store as before
+    assert len(kb.dict) == n_terms
+    assert kb.rels["e"] is store
+    kb.ingest_rows("e", chunk2)       # retrying the same chunk succeeds
+
+    ref = EngineKB(prog, [parse_atom(f"e({a}, {b})")
+                          for a, b in [("a", "b"), ("b", "c"),
+                                       ("c", "d"), ("d", "e")]])
+    materialize(kb, mode="tg")
+    materialize(ref, mode="tg")
+    assert kb.decode_facts() == ref.decode_facts()
+
+
+def test_host_sync_stats_snapshot():
+    ops.HOST_SYNC_STATS.reset()
+    ops.HOST_SYNC_STATS.fused_pulls = 3
+    ops.HOST_SYNC_STATS.dist_retries = 2
+    snap = ops.HOST_SYNC_STATS.snapshot()
+    ops.HOST_SYNC_STATS.reset()
+    assert snap is not ops.HOST_SYNC_STATS
+    assert snap.fused_pulls == 3 and snap.dist_retries == 2
+    assert ops.HOST_SYNC_STATS.fused_pulls == 0
+
+
+# ---------------------------------------------------------------------------
+# bounded retry budgets: diagnostics, storm, graceful spill
+# ---------------------------------------------------------------------------
+def test_retry_budget_escalates_and_raises(monkeypatch):
+    monkeypatch.setenv("REPRO_MAX_RETRIES", "3")
+    caps = plan._Caps.__new__(plan._Caps)
+    caps.store, caps.delta, caps.tail = {}, {"T": 1}, {}
+    caps.join, caps.bucket = {}, {}
+    budget = plan.RetryBudget(caps, row_bytes=8)
+    label = ("delta", "T")
+    budget.overflow([label])          # streak 1: x2
+    budget.overflow([label])          # streak 2: x2 (legacy trajectory)
+    assert caps.delta["T"] == 4
+    budget.overflow([label])          # streak 3: x2^1 twice
+    assert caps.delta["T"] == 16
+    with pytest.raises(plan.CapacityError) as ei:
+        budget.overflow([label])
+    assert ei.value.label == label and ei.value.requested_bytes > 0
+    assert "REPRO_MAX_RETRIES" in str(ei.value)
+    budget.ok()                       # progress resets the ladder
+    budget.overflow([label])
+    assert caps.delta["T"] == 32
+
+
+def test_retry_budget_resident_ceiling():
+    caps = plan._Caps.__new__(plan._Caps)
+    caps.store, caps.delta = {}, {"T": 1 << 20}
+    caps.tail, caps.join, caps.bucket = {}, {}, {}
+    budget = plan.RetryBudget(caps, row_bytes=8, attempts=100,
+                              resident_bytes=1 << 22)
+    with pytest.raises(plan.CapacityError, match="REPRO_MAX_RESIDENT_MB"):
+        budget.overflow([("delta", "T")])
+
+
+def test_storm_exhausts_budget_with_diagnostic(monkeypatch):
+    """Under a forced-overflow storm with a 1-attempt budget the fused
+    executor must raise a diagnostic CapacityError (spill=False), return
+    None (spill=True, no progress yet), and the materialize() entry point
+    must still produce the right closure via fallback."""
+    monkeypatch.setenv("REPRO_FAULT_SPEC", "storm")
+    monkeypatch.setenv("REPRO_MAX_RETRIES", "1")
+    monkeypatch.setattr(faultinject, "_CACHE", {})
+    monkeypatch.setattr(plan, "_CAP_MEMO", {})
+    monkeypatch.delenv("REPRO_CKPT_DIR", raising=False)
+    # the planner's cold-start floor is 64 delta rows (one doubling: 128);
+    # a >128-row extensional delta exhausts a 1-attempt ladder for certain
+    B = _chain(200, extra=50, seed=1)
+    with pytest.raises(plan.CapacityError) as ei:
+        materialize_fused(EngineKB(TC, B), mode="tg", spill=False)
+    assert ei.value.requested_bytes > 0 and ei.value.label is not None
+    # cold-start overflow with spill on: clean fragment fallback (None)
+    assert materialize_fused(EngineKB(TC, B), mode="tg") is None
+    # end to end: the driver degrades to two-phase and converges
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    kb = EngineKB(TC, B)
+    st = materialize(kb, mode="tg")
+    assert st.extra.get("fused") is not True
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    monkeypatch.delenv("REPRO_FAULT_SPEC", raising=False)
+    monkeypatch.setattr(faultinject, "_CACHE", {})
+    ref = EngineKB(TC, B)
+    materialize(ref, mode="tg")
+    assert kb.decode_facts() == ref.decode_facts()
+
+
+def test_midrun_capacity_spill_to_two_phase(monkeypatch):
+    """A capacity ladder that diverges AFTER committed progress must not
+    discard that progress: the fused executor writes back its last good
+    state and the two-phase executor finishes the fixpoint."""
+    prog = parse_program("""
+        s(X) -> t(X)
+        t(X) & e(X, Y) -> t(Y)
+    """)
+    B = [parse_atom("s(v0)")] + \
+        [parse_atom(f"e(v0, w{i})") for i in range(100)]
+    ref = EngineKB(prog, B)
+    materialize(ref, mode="tg")
+
+    monkeypatch.setenv("REPRO_MAX_RETRIES", "2")
+    monkeypatch.setattr(plan, "_CAP_MEMO", {})
+    monkeypatch.delenv("REPRO_CKPT_DIR", raising=False)
+
+    # plant t's delta bucket so round 1 (1 fresh row) fits but the 100-row
+    # fan-out round overflows past the 2-attempt ladder (8 -> 16 -> 32);
+    # other preds (the normalizer's aux relations) keep a roomy bucket
+    def small_delta(self, pred):
+        if pred not in self.delta:
+            self.delta[pred] = 8 if pred == "t" else 256
+        return self.delta[pred]
+    monkeypatch.setattr(plan._Caps, "delta_cap", small_delta)
+
+    kb = EngineKB(prog, B)
+    st = materialize_fused(kb, mode="tg")
+    assert st is not None
+    assert "spilled" in st.extra and "capacity bucket" in st.extra["spilled"]
+    assert kb.decode_facts() == ref.decode_facts()
+
+
+# ---------------------------------------------------------------------------
+# in-process resume (two-phase and fused)
+# ---------------------------------------------------------------------------
+def _ckpt_env(monkeypatch, tmp_path):
+    monkeypatch.delenv("REPRO_DIST", raising=False)
+    monkeypatch.delenv("REPRO_FAULT_SPEC", raising=False)
+    monkeypatch.setattr(faultinject, "_CACHE", {})
+    monkeypatch.setenv("REPRO_CKPT_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_CKPT_KEEP", "100")
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_midrun_resume_exact_parity(tmp_path, monkeypatch, fused):
+    """Run to completion with checkpointing, rewind the checkpoint store
+    to a mid-run tag, and resume with a FRESH process-state KB: the
+    continued run must reach the identical closure and round count."""
+    if fused:
+        monkeypatch.setenv("REPRO_FUSED", "1")
+    else:
+        monkeypatch.delenv("REPRO_FUSED", raising=False)
+    B = _chain(14, extra=6, seed=5)
+    ref = EngineKB(TC, B)
+    st_ref = materialize(ref, mode="tg")
+
+    _ckpt_env(monkeypatch, tmp_path)
+    kb1 = EngineKB(TC, B)
+    st1 = materialize(kb1, mode="tg")
+    assert st1.extra.get("checkpoints", 0) >= 2
+    assert kb1.decode_facts() == ref.decode_facts()
+
+    mgr = recovery.RecoveryManager(str(tmp_path), keep=100)
+    tags = mgr.tags()
+    mid = tags[len(tags) // 2]
+    assert 0 < mid < st_ref.rounds
+    for t in tags:
+        if t > mid:
+            mgr.drop(t)
+
+    kb2 = EngineKB(TC, B)
+    st2 = materialize(kb2, mode="tg")
+    assert st2.extra.get("resumed_rounds") == mid
+    assert st2.rounds == st_ref.rounds
+    assert kb2.decode_facts() == ref.decode_facts()
+
+
+def test_resume_of_finished_run_is_noop(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    B = _chain(10, extra=4, seed=2)
+    ref = EngineKB(TC, B)
+    st_ref = materialize(ref, mode="tg")
+
+    _ckpt_env(monkeypatch, tmp_path)
+    kb1 = EngineKB(TC, B)
+    materialize(kb1, mode="tg")
+    kb2 = EngineKB(TC, B)
+    st2 = materialize(kb2, mode="tg")
+    assert st2.extra.get("resumed_rounds") == st_ref.rounds
+    assert st2.rounds == st_ref.rounds    # nothing re-derived
+    assert kb2.decode_facts() == ref.decode_facts()
+
+
+def test_cross_executor_restore(tmp_path, monkeypatch):
+    """Checkpoints are executor-neutral host state: one written by the
+    fused executor mid-run restores into the two-phase executor."""
+    B = _chain(14, extra=6, seed=5)
+    ref = EngineKB(TC, B)
+    st_ref = materialize(ref, mode="tg")
+
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    _ckpt_env(monkeypatch, tmp_path)
+    kb1 = EngineKB(TC, B)
+    materialize(kb1, mode="tg")
+    mgr = recovery.RecoveryManager(str(tmp_path), keep=100)
+    tags = mgr.tags()
+    mid = tags[len(tags) // 2]
+    assert 0 < mid < st_ref.rounds
+    for t in tags:
+        if t > mid:
+            mgr.drop(t)
+
+    monkeypatch.delenv("REPRO_FUSED", raising=False)   # resume on two-phase
+    kb2 = EngineKB(TC, B)
+    st2 = materialize(kb2, mode="tg")
+    assert st2.extra.get("resumed_rounds") == mid
+    assert st2.extra.get("resumed_from", (None,))[0] == "fused"
+    assert st2.rounds == st_ref.rounds
+    assert kb2.decode_facts() == ref.decode_facts()
+
+
+# ---------------------------------------------------------------------------
+# subprocess crash drills: SIGKILL / SIGTERM, single-device and elastic dist
+# ---------------------------------------------------------------------------
+_CRASH_SCRIPT = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, %r)
+    import numpy as np
+    from repro.core.terms import parse_atom, parse_program
+    from repro.engine.materialize import EngineKB, materialize
+
+    TC = parse_program("e(X, Y) -> T(X, Y)\\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    rng = np.random.default_rng(5)
+    edges = [(i, i + 1) for i in range(80)]
+    edges += [tuple(e) for e in rng.integers(0, 80, (30, 2))]
+    B = [parse_atom(f"e(v{a}, v{b})") for a, b in edges]
+    kb = EngineKB(TC, B)
+    materialize(kb, mode="tg")
+    print("SURVIVED")
+""" % SRC)
+
+_RESUME_SCRIPT = textwrap.dedent("""
+    import os, sys, json
+    sys.path.insert(0, %r)
+    ckpt = os.environ.pop("REPRO_CKPT_DIR")
+    import numpy as np
+    from repro.core.terms import parse_atom, parse_program
+    from repro.engine.materialize import EngineKB, materialize
+
+    TC = parse_program("e(X, Y) -> T(X, Y)\\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    rng = np.random.default_rng(5)
+    edges = [(i, i + 1) for i in range(80)]
+    edges += [tuple(e) for e in rng.integers(0, 80, (30, 2))]
+    B = [parse_atom(f"e(v{a}, v{b})") for a, b in edges]
+
+    ref = EngineKB(TC, B)                   # checkpoint env popped: clean run
+    st_ref = materialize(ref, mode="tg")
+
+    os.environ["REPRO_CKPT_DIR"] = ckpt
+    kb = EngineKB(TC, B)
+    st = materialize(kb, mode="tg")
+    print(json.dumps({
+        "parity": kb.decode_facts() == ref.decode_facts(),
+        "resumed_rounds": st.extra.get("resumed_rounds", 0),
+        "rounds": st.rounds, "ref_rounds": st_ref.rounds,
+    }))
+""" % SRC)
+
+
+def _run(script, env):
+    full = {**os.environ, **env}
+    full.pop("REPRO_FAULT_SPEC", None)
+    full.update(env)
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=600,
+                          env=full)
+
+
+def test_sigkill_then_resume_fused_subprocess(tmp_path):
+    """kill -9 mid-fixpoint; a fresh process resumes from the durable
+    checkpoint and reaches the exact closure of an uninterrupted run."""
+    env = {"REPRO_FUSED": "1", "REPRO_CKPT_DIR": str(tmp_path),
+           "REPRO_CKPT_KEEP": "100"}
+    r = _run(_CRASH_SCRIPT,
+             {**env, "REPRO_FAULT_SPEC": "storm,crash:round=4"})
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr[-2000:])
+    assert "SURVIVED" not in r.stdout
+    assert recovery.RecoveryManager(str(tmp_path)).tags(), \
+        "crash left no durable checkpoint behind"
+
+    r = _run(_RESUME_SCRIPT, env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["parity"], out
+    assert 1 <= out["resumed_rounds"] < out["rounds"]
+    assert out["rounds"] == out["ref_rounds"]
+
+
+def test_sigterm_checkpoints_and_exits_143_subprocess(tmp_path):
+    """SIGTERM during the fused fixpoint: the guard is honored at the next
+    host pull — the run saves a consistent checkpoint, exits 143, and a
+    fresh process resumes to exact parity."""
+    env = {"REPRO_FUSED": "1", "REPRO_CKPT_DIR": str(tmp_path),
+           "REPRO_CKPT_KEEP": "100"}
+    r = _run(_CRASH_SCRIPT,
+             {**env, "REPRO_FAULT_SPEC": "storm,sigterm:round=3"})
+    assert r.returncode == 143, (r.returncode, r.stderr[-2000:])
+    assert "SURVIVED" not in r.stdout
+    loaded = recovery.RecoveryManager(str(tmp_path)).load()
+    assert loaded is not None, "exit 143 without a valid checkpoint"
+    assert loaded[0]["rounds"] >= 1
+
+    r = _run(_RESUME_SCRIPT, env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["parity"], out
+    assert 1 <= out["resumed_rounds"] < out["rounds"]
+
+
+_DIST_RESUME_SCRIPT = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    sys.path.insert(0, %r)
+    ckpt = os.environ.pop("REPRO_CKPT_DIR")
+    import numpy as np
+    from repro.core.terms import parse_atom, parse_program
+    from repro.engine import ops
+    from repro.engine.materialize import EngineKB, materialize
+
+    TC = parse_program("e(X, Y) -> T(X, Y)\\nT(X, Y) & e(Y, Z) -> T(X, Z)")
+    rng = np.random.default_rng(5)
+    edges = [(i, i + 1) for i in range(80)]
+    edges += [tuple(e) for e in rng.integers(0, 80, (30, 2))]
+    B = [parse_atom(f"e(v{a}, v{b})") for a, b in edges]
+
+    ref = EngineKB(TC, B)
+    st_ref = materialize(ref, mode="tg", backend="dist")
+
+    os.environ["REPRO_CKPT_DIR"] = ckpt
+    ops.HOST_SYNC_STATS.reset()
+    kb = EngineKB(TC, B)
+    st = materialize(kb, mode="tg", backend="dist")
+    s = ops.HOST_SYNC_STATS.snapshot()
+    resumed = st.extra.get("resumed_rounds", 0)
+    # the per-round pull accounting survives a mid-run elastic restore
+    invariant = s.dist_pulls == (
+        (st.rounds - resumed - s.dist_fixpoint_iters)
+        + s.dist_retries + s.dist_fixpoint_pulls)
+    print(json.dumps({
+        "parity": kb.decode_facts() == ref.decode_facts(),
+        "resumed_rounds": resumed, "rounds": st.rounds,
+        "ref_rounds": st_ref.rounds,
+        "resumed_from": list(st.extra.get("resumed_from", ())),
+        "pulls_invariant": invariant,
+    }))
+""" % SRC)
+
+
+def test_sigkill_then_elastic_resume_dist_subprocess(tmp_path):
+    """Crash a 4-shard distributed run with kill -9, resume it on a
+    2-device mesh: the checkpoint is mesh-neutral, the restoring run
+    re-partitions by the exchange hash, and the closure is exact."""
+    env = {"REPRO_DIST": "1", "REPRO_CKPT_DIR": str(tmp_path),
+           "REPRO_CKPT_KEEP": "100",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
+    r = _run(_CRASH_SCRIPT,
+             {**env, "REPRO_FAULT_SPEC": "storm,crash:round=3"})
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr[-2000:])
+    assert recovery.RecoveryManager(str(tmp_path)).tags(), \
+        "crash left no durable checkpoint behind"
+    loaded = recovery.RecoveryManager(str(tmp_path)).load()
+    assert loaded is not None and loaded[0]["ndev"] == 4
+
+    env.pop("XLA_FLAGS")                  # the resume script forces ndev=2
+    r = _run(_DIST_RESUME_SCRIPT, env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["parity"], out
+    assert 1 <= out["resumed_rounds"] < out["rounds"]
+    assert out["rounds"] == out["ref_rounds"]
+    assert out["resumed_from"] == ["dist", 4]
+    assert out["pulls_invariant"], out
